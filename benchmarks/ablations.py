@@ -1,0 +1,102 @@
+"""Tables 2 / 3 / 17 / App. P — L_max, outstanding depth D, buffer ablations."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import MODEL_2B, MODEL_8B, PREP_RATE, evaluate_schedule
+from repro.core import OdbConfig
+from repro.data import get_dataset, odb_schedule
+
+WORLD = 8
+DATASETS = ("ultrachat", "llava", "sharegpt4o")
+
+
+def lmax_ablation(scale=0.03):
+    """Table 2: throughput vs per-batch token budget at fixed D=1024."""
+    rows = []
+    for dataset in DATASETS:
+        ds = get_dataset(dataset, scale=scale)
+        lengths = ds.lengths()
+        prep = PREP_RATE.get(dataset, PREP_RATE["default"])
+        for lmax in (2048, 4096, 8192, 12288, 14336, 16384):
+            cfg = OdbConfig(l_max=lmax, buffer_size=1024, prefetch_factor=256, num_workers=4)
+            steps, _ = odb_schedule(lengths, WORLD, cfg)
+            rep = evaluate_schedule(f"odb_l{lmax}", steps, MODEL_8B, prep_rate=prep, depth=cfg.depth)
+            rows.append(dict(rep.row(), dataset=dataset, l_max=lmax))
+    return rows
+
+
+def depth_ablation(scale=0.03):
+    """Table 3 + App. P: depth D controls input overlap; clamp at buffer."""
+    rows = []
+    for dataset in DATASETS:
+        ds = get_dataset(dataset, scale=scale)
+        lengths = ds.lengths()
+        prep = PREP_RATE.get(dataset, PREP_RATE["default"])
+        for model, tag in ((MODEL_2B, "2b"), (MODEL_8B, "8b")):
+            for pf in (32, 64, 128, 256, 512, 1024, 2048):
+                cfg = OdbConfig(l_max=12288, buffer_size=1024, prefetch_factor=pf, num_workers=4)
+                steps, _ = odb_schedule(lengths, WORLD, cfg)
+                rep = evaluate_schedule(
+                    f"odb_pf{pf}", steps, model, prep_rate=prep, depth=cfg.depth
+                )
+                rows.append(
+                    dict(rep.row(), dataset=dataset, model=tag, pf=pf, depth=cfg.depth)
+                )
+    return rows
+
+
+def buffer_ablation(scale=0.03):
+    """Table 17: grouping buffer size vs padding/throughput (ShareGPT4o)."""
+    rows = []
+    ds = get_dataset("sharegpt4o", scale=scale)
+    lengths = ds.lengths()
+    prep = PREP_RATE["sharegpt4o"]
+    for model, tag, lmax in ((MODEL_2B, "2b", 4096), (MODEL_8B, "8b", 8192)):
+        for buffer in (10, 50, 100, 500, 1024, 2000):
+            cfg = OdbConfig(l_max=lmax, buffer_size=buffer, prefetch_factor=256, num_workers=4)
+            steps, _ = odb_schedule(lengths, WORLD, cfg)
+            rep = evaluate_schedule(
+                f"odb_buf{buffer}", steps, model, prep_rate=prep, depth=cfg.depth
+            )
+            rows.append(dict(rep.row(), model=tag, buffer=buffer, l_max=lmax))
+    return rows
+
+
+def main(argv=None) -> list[str]:
+    outdir = pathlib.Path("artifacts/bench")
+    outdir.mkdir(parents=True, exist_ok=True)
+    lines = []
+
+    lm = lmax_ablation()
+    (outdir / "lmax_ablation.json").write_text(json.dumps(lm, indent=1))
+    for dataset in DATASETS:
+        sub = [r for r in lm if r["dataset"] == dataset]
+        best = max(sub, key=lambda r: r["sam_per_s"])
+        lines.append(
+            f"lmax_ablation/{dataset},0.0,best_lmax={best['l_max']};"
+            f"sam_s={best['sam_per_s']:.2f};pad%={best['padding_pct']:.2f}"
+        )
+
+    dp = depth_ablation()
+    (outdir / "depth_ablation.json").write_text(json.dumps(dp, indent=1))
+    clamp = [r for r in dp if r["pf"] in (32, 64, 128) and r["dataset"] == "sharegpt4o" and r["model"] == "8b"]
+    spread = max(r["sam_per_s"] for r in clamp) - min(r["sam_per_s"] for r in clamp)
+    lines.append(f"depth_ablation/clamp_validation,0.0,pf32-128_spread={spread:.4f};depth={clamp[0]['depth']}")
+
+    bu = buffer_ablation()
+    (outdir / "buffer_ablation.json").write_text(json.dumps(bu, indent=1))
+    b8 = [r for r in bu if r["model"] == "8b"]
+    best = max(b8, key=lambda r: r["sam_per_s"])
+    lines.append(
+        f"buffer_ablation/8b,0.0,best_buffer={best['buffer']};"
+        f"pad%={best['padding_pct']:.2f};sam_s={best['sam_per_s']:.2f}"
+    )
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,66 @@
+"""§Roofline — aggregate the dry-run artifacts into the roofline table."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_rows(mesh: str | None = None) -> list[dict]:
+    rows = []
+    for path in sorted(ARTIFACTS.glob("*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        r = rec["roofline"]
+        r["bytes_per_device_gb"] = rec["bytes_per_device"] / 1e9
+        r["compile_s"] = rec.get("compile_s")
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful | roofline_frac | GB/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    body = ""
+    for r in rows:
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {r['bytes_per_device_gb']:.1f} |\n"
+        )
+    return hdr + body
+
+
+def main(argv=None) -> list[str]:
+    rows = load_rows()
+    out = pathlib.Path("artifacts/bench")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "roofline_table.md").write_text(markdown_table(rows))
+    (out / "roofline.json").write_text(json.dumps(rows, indent=1))
+    single = [r for r in rows if r["mesh"] == "single"]
+    if not single:
+        return ["roofline/summary,0.0,no_artifacts=1"]
+    worst = min(single, key=lambda r: r["roofline_fraction"])
+    most_coll = max(single, key=lambda r: r["collective_s"] / max(r["compute_s"] + r["memory_s"], 1e-12))
+    dominants = {}
+    for r in single:
+        dominants[r["dominant"]] = dominants.get(r["dominant"], 0) + 1
+    return [
+        f"roofline/cells,0.0,n={len(rows)};single={len(single)};dominants={dominants}",
+        f"roofline/worst,0.0,cell={worst['arch']}x{worst['shape']};frac={worst['roofline_fraction']:.4f}",
+        f"roofline/most_collective,0.0,cell={most_coll['arch']}x{most_coll['shape']};coll_s={most_coll['collective_s']:.3e}",
+    ]
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,48 @@
+"""Benchmark harness entry point — one module per paper table.
+
+Prints ``name,us_per_call,derived`` CSV lines and persists JSON artifacts
+under ``artifacts/bench/``.
+
+  throughput         — Table 1 / 13 / 14 (all methods × datasets × 2B/8B)
+  ablations          — Tables 2 / 3 / 17 + App. P clamp
+  protocol_audit     — Tables 4 / 5 + Corollary 1
+  join_and_scaling   — Tables 18 / 21 + Fig. 2b / App. K
+  roofline_bench     — §Roofline (reads dry-run artifacts)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import ablations, join_and_scaling, protocol_audit, roofline_bench, throughput
+
+    modules = [
+        ("throughput", throughput),
+        ("ablations", ablations),
+        ("protocol_audit", protocol_audit),
+        ("join_and_scaling", join_and_scaling),
+        ("roofline", roofline_bench),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for line in mod.main([]):
+                print(line, flush=True)
+            print(f"{name}/__wall__,{1e6*(time.perf_counter()-t0):.0f},ok=1", flush=True)
+        except Exception as exc:  # pragma: no cover
+            failures += 1
+            print(f"{name}/__error__,0.0,error={type(exc).__name__}:{exc}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

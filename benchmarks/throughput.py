@@ -1,0 +1,114 @@
+"""Table 1 / 13 / 14 — emitted-sample throughput + decomposition.
+
+All methods produce their *real* batch schedules (real grouping, alignment,
+padding, update geometry); the H20 cost model (benchmarks/common.py) turns
+schedules into wall time.  Speedups normalize to the Standard row, as in the
+paper.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.common import (
+    MODEL_2B,
+    MODEL_8B,
+    PREP_RATE,
+    ScheduleReport,
+    evaluate_schedule,
+)
+from repro.core import OdbConfig
+from repro.data import (
+    LengthCache,
+    bmt_schedule,
+    get_dataset,
+    gmt_schedule,
+    hfg_schedule,
+    odb_schedule,
+    packing_schedule,
+    sorted_schedule,
+    standard_schedule,
+)
+
+WORLD = 8
+
+# Selected configurations (paper App. I per-config tuples; bs from §3.1 sweeps)
+SELECTED = {
+    ("ultrachat", "8b"): dict(std_bs=8, sorted_bs=16, lmax=12288, budget=16384, hfg_bs=16),
+    ("ultrachat", "2b"): dict(std_bs=8, sorted_bs=16, lmax=16384, budget=16384, hfg_bs=8),
+    ("llava", "8b"): dict(std_bs=8, sorted_bs=16, lmax=12288, budget=16384, hfg_bs=16),
+    ("llava", "2b"): dict(std_bs=4, sorted_bs=16, lmax=8192, budget=8192, hfg_bs=8),
+    ("sharegpt4o", "8b"): dict(std_bs=1, sorted_bs=1, lmax=12288, budget=12288, hfg_bs=1),
+    ("sharegpt4o", "2b"): dict(std_bs=1, sorted_bs=2, lmax=4096, budget=12288, hfg_bs=1),
+    ("mmmix", "2b"): dict(std_bs=1, sorted_bs=2, lmax=12288, budget=12288, hfg_bs=2),
+}
+
+
+def run_dataset(dataset: str, scale_tag: str, *, data_scale: float = 0.05, seed: int = 0):
+    model = MODEL_8B if scale_tag == "8b" else MODEL_2B
+    sel = SELECTED[(dataset, scale_tag)]
+    ds = get_dataset(dataset, scale=data_scale)
+    lengths = ds.lengths(seed=seed)
+    cache = LengthCache.build(ds, seed=seed)
+    prep = PREP_RATE.get(dataset, PREP_RATE["default"])
+
+    rows: list[ScheduleReport] = []
+
+    def ev(method, steps, **kw):
+        rows.append(
+            evaluate_schedule(method, steps, model, prep_rate=prep, **kw)
+        )
+
+    ev("standard", standard_schedule(lengths, WORLD, sel["std_bs"], seed=seed))
+    ev("sorted", sorted_schedule(lengths, WORLD, sel["sorted_bs"], seed=seed))
+    if dataset == "ultrachat":  # packing is text-only in the paper's stack
+        ev("packing", packing_schedule(lengths, WORLD, sel["budget"], seed=seed), packed=True)
+    ev("gmt_oracle", gmt_schedule(cache, WORLD, sel["budget"]))
+    ev("bmt_oracle", bmt_schedule(cache, WORLD, sel["budget"], seed=seed))
+    ev("hfg_oracle", hfg_schedule(cache, WORLD, sel["hfg_bs"], seed=seed))
+    cfg = OdbConfig(
+        l_max=sel["lmax"], buffer_size=1024, prefetch_factor=256, num_workers=4
+    )
+    steps, audit = odb_schedule(lengths, WORLD, cfg, seed=seed)
+    ev("odb", steps, depth=cfg.depth)
+
+    std = rows[0].sam_per_s
+    out = []
+    for r in rows:
+        d = r.row()
+        d.update(dataset=dataset, model=scale_tag, speedup=r.sam_per_s / std)
+        out.append(d)
+    out[-1]["eta_identity"] = audit.eta_identity
+    out[-1]["eta_quota"] = audit.eta_quota
+    return out
+
+
+def main(argv=None) -> list[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args(argv)
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    lines = []
+    all_rows = []
+    for dataset, tag in SELECTED:
+        rows = run_dataset(dataset, tag, data_scale=args.scale)
+        all_rows.extend(rows)
+        std = next(r for r in rows if r["method"] == "standard")
+        odb = next(r for r in rows if r["method"] == "odb")
+        lines.append(
+            f"throughput/{dataset}_{tag},"
+            f"{1e6 * odb['wall_s'] / max(odb['upd_per_epoch'],1):.1f},"
+            f"odb_speedup={odb['speedup']:.2f};odb_pad%={odb['padding_pct']:.2f};"
+            f"std_pad%={std['padding_pct']:.2f};sam_upd={odb['sam_per_upd']:.1f}"
+        )
+    (outdir / "throughput.json").write_text(json.dumps(all_rows, indent=1))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

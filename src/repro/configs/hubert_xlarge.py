@@ -1,0 +1,42 @@
+"""HuBERT-XLarge [audio] — encoder-only [arXiv:2106.07447].
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (cluster targets).
+Encoder-only: bidirectional attention, no decode step (decode/long cells
+skipped — DESIGN.md §4).  The conv feature-extractor frontend is a STUB:
+``input_specs()`` supplies precomputed frame embeddings (B, T, d_model).
+"""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    vocab_size=504,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=80,
+    d_ff=5120,
+    causal=False,
+    is_encoder=True,
+    input_embeds=True,
+    act="gelu",
+    gated_mlp=False,
+    norm="ln",
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG,
+    name="hubert-smoke",
+    n_layers=2,
+    d_model=64,
+    vocab_size=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=128,
+    dtype="float32",
+)

@@ -1,0 +1,36 @@
+"""Yi-34B [dense] — llama-arch GQA [arXiv:2403.04652].
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.  56 heads are not
+divisible by the 16-way model axis; GSPMD pads the head dim (overhead
+reported in EXPERIMENTS.md §Roofline).
+"""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    vocab_size=64000,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=20480,
+    norm="rms",
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG,
+    name="yi-smoke",
+    n_layers=2,
+    d_model=64,
+    vocab_size=512,
+    n_heads=8,  # keeps GQA ratio 56/8 -> 8/2 shape class
+    n_kv_heads=2,
+    d_head=8,
+    d_ff=160,
+    dtype="float32",
+)

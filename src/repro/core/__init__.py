@@ -1,0 +1,53 @@
+"""Core ODB library — the paper's contribution as composable modules."""
+
+from repro.core.alignment import (
+    AlignmentResult,
+    RankAlignmentState,
+    align_all,
+    align_rank,
+    alignment_target,
+    overflow_downward,
+    split_upward,
+)
+from repro.core.buckets import (
+    BucketSpec,
+    PackedBatch,
+    PackedBucketSpec,
+    PaddedBatch,
+    idle_batch,
+    pack_group,
+    pad_group,
+)
+from repro.core.comm import (
+    JaxProcessCollective,
+    LoopbackCollective,
+    ProtocolDesyncError,
+    metadata_round_bytes,
+)
+from repro.core.grouping import (
+    Group,
+    Sample,
+    greedy_group,
+    padding_stats,
+    target_group_size,
+)
+from repro.core.loss_scaling import (
+    RankLossStats,
+    ddp_scaled_loss,
+    prescale_factor,
+    reference_per_token_loss,
+    sample_weights,
+    token_weights,
+)
+from repro.core.metadata import EmitAccounting, StepMetadata, step_metadata
+from repro.core.protocol import (
+    IDLE,
+    BoundedTerminationError,
+    EpochAudit,
+    IterationResult,
+    OdbConfig,
+    OdbProtocolEngine,
+    RankRuntime,
+    RoundRecord,
+    run_epoch,
+)

@@ -1,0 +1,531 @@
+"""Unified loop protocol for the Distributed Group Alignment Problem (DGAP).
+
+Implements the paper's §2.3 / App. A / App. C / App. E machinery:
+
+  * per-rank state machine over the four disjoint components
+    ``(R, Q, B, E)`` = (sampler-pending, worker queue, collate buffer,
+    emitted) with the three transition primitives Fetch/Drain/Emit
+    (App. C.1) — every transition moves sampler views between components,
+    never creating or destroying them (Lemma 1, No-Leak);
+  * one unconditional primary ``all_gather`` per outer round exchanging
+    ``[idx_budget_r, n_groups_r, sizes_r (, tokens_r)]`` with
+    ``n_groups_r ∈ {n>0, 0, -1}`` = produced / insufficient-data / finished;
+  * Max-Based Bidirectional Group Alignment to the target ``T_grp`` (Eq. 3)
+    with split / overflow-recirculate adjustment (Alg. 1);
+  * **join mode** (default): ranks drain outstanding sampler views before
+    advertising local finish; global completion only when *all* ranks
+    advertise ``-1`` (Theorem 1 — strict identity coverage, η_logical = 0);
+  * **non-join mode** (opt-in): the logical iteration ends when *any* rank
+    advertises ``-1``; at most ``W·D`` fetched views are abandoned per
+    logical iteration (Lemma 4) and the trainer chains logical iterations
+    until the cumulative emit count reaches the quota
+    ``N ≤ S_emit ≤ N + S_max`` (Theorem 2);
+  * IDLE sentinels: a rank that emits fewer than ``T_grp`` real groups in a
+    round pads its output queue with IDLE entries so per-step positions stay
+    aligned across ranks.  In the JAX/SPMD adaptation an IDLE entry becomes a
+    zero-token batch whose contribution is exactly annihilated by token-level
+    loss scaling (Eq. 2 with ``t_r = 0``) — see DESIGN.md §2.
+
+The engine simulates ``W`` ranks in-process, round-synchronously, through
+``LoopbackCollective`` — the same per-rank methods can be driven by one
+process per host over ``JaxProcessCollective`` on a real cluster.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Callable, Iterator, Sequence
+
+from repro.core.alignment import (
+    AlignmentResult,
+    RankAlignmentState,
+    align_rank,
+    alignment_target,
+)
+from repro.core.comm import LoopbackCollective, ProtocolDesyncError
+from repro.core.grouping import Group, Sample, greedy_group
+
+IDLE = None  # IDLE_DATA sentinel in the output queue
+
+
+@dataclasses.dataclass(frozen=True)
+class OdbConfig:
+    """ODB knobs (paper §3.1 'Method-specific parameters')."""
+
+    l_max: int  # per-step token budget L_max
+    buffer_size: int = 1024  # grouping buffer (collate-side)
+    prefetch_factor: int = 256  # pf
+    num_workers: int = 4  # nw
+    join_mode: bool = True  # default join (paper default; App. Q)
+    output_capacity: int | None = None  # C_r envelope; None = unbounded
+    exact_token_scaling: bool = True  # triggers the optional second gather
+
+    @property
+    def depth(self) -> int:
+        """Outstanding-depth envelope ``D = max(pf*nw, buffer_size)`` (§2.3).
+
+        When ``pf*nw < buffer_size`` the reset logic injects extra indices so
+        the collate stage can assemble a full group — the clamp validated in
+        App. P.
+        """
+        return max(self.prefetch_factor * self.num_workers, self.buffer_size)
+
+
+@dataclasses.dataclass
+class RankCounters:
+    fetched: int = 0
+    drained: int = 0
+    emitted_views: int = 0
+    emitted_groups: int = 0
+    idle_slots: int = 0
+    splits: int = 0
+    overflow_groups: int = 0
+    recirculated_views: int = 0
+
+
+class RankRuntime:
+    """Per-rank protocol state: the (R, Q, B, E) machine of App. C.1."""
+
+    def __init__(self, rank: int, views: Sequence[Sample], config: OdbConfig):
+        self.rank = rank
+        self.config = config
+        self.pending: collections.deque[Sample] = collections.deque(views)  # R
+        self.worker_queue: collections.deque[Sample] = collections.deque()  # Q
+        self.buffer: list[Sample] = []  # B
+        self.emitted: list[Sample] = []  # E
+        self.out_queue: collections.deque[Group | None] = collections.deque()
+        self.counters = RankCounters()
+        self.local_finished = False
+        # Straggler simulation: max views moved Q->B per round (None = all).
+        self.drain_rate: int | None = None
+
+    # -- invariants ----------------------------------------------------------
+    def component_sizes(self) -> tuple[int, int, int, int]:
+        return (
+            len(self.pending),
+            len(self.worker_queue),
+            len(self.buffer),
+            len(self.emitted),
+        )
+
+    @property
+    def outstanding(self) -> int:
+        """|U_r| = |Q_r ⊎ B_r| — fetched-but-not-emitted (Lemma 4)."""
+        return len(self.worker_queue) + len(self.buffer)
+
+    @property
+    def total_views(self) -> int:
+        return sum(self.component_sizes())
+
+    # -- transition primitives (App. C.1) -------------------------------------
+    def fetch_and_drain(self) -> None:
+        """Fetch R->Q up to the depth envelope, then drain Q->B.
+
+        The iterator schedules fetch/drain so the fetched-but-not-emitted set
+        ``Q ⊎ B`` stays within ``D``; the collate buffer ``B`` itself is a
+        bounded grouping window of at most ``buffer_size`` samples (paper
+        §2.1: workers drain "into a configured grouping buffer") — larger
+        buffers group over wider windows (Table 17's mechanism).
+        """
+        budget = self.config.depth - self.outstanding
+        while budget > 0 and self.pending:
+            self.worker_queue.append(self.pending.popleft())
+            self.counters.fetched += 1
+            budget -= 1
+        allowance = (
+            len(self.worker_queue) if self.drain_rate is None else self.drain_rate
+        )
+        while (
+            allowance > 0
+            and self.worker_queue
+            and len(self.buffer) < self.config.buffer_size
+        ):
+            self.buffer.append(self.worker_queue.popleft())
+            self.counters.drained += 1
+            allowance -= 1
+
+    # -- round payload ---------------------------------------------------------
+    def candidate_groups(self) -> list[Group]:
+        """Form candidate groups when the buffer is ready (collate stage).
+
+        Grouping triggers when the buffer has filled to ``buffer_size`` or the
+        sampler + worker queue are exhausted (tail drain).  Otherwise the rank
+        reports "insufficient data" (n_groups = 0) and the round only
+        fetches/drains for it (skip behaviour, Lemma 2 case (b)).
+        """
+        ready = len(self.buffer) >= self.config.buffer_size or (
+            not self.pending and not self.worker_queue and self.buffer
+        )
+        if not ready:
+            return []
+        return greedy_group(self.buffer, self.config.l_max)
+
+    def status_code(self, groups: Sequence[Group]) -> int:
+        """n_groups ∈ {n>0, 0, -1}: produced / insufficient / finished."""
+        if groups:
+            return len(groups)
+        if not self.pending and not self.worker_queue and not self.buffer:
+            return -1
+        return 0
+
+    @property
+    def free_slots(self) -> int:
+        if self.config.output_capacity is None:
+            return 1 << 30  # effectively unbounded
+        return max(self.config.output_capacity - len(self.out_queue), 0)
+
+    # -- emission ----------------------------------------------------------------
+    def emit_aligned(self, result: AlignmentResult, target: int) -> int:
+        """Emit aligned groups, recirculate overflow, pad with IDLE to target."""
+        emitted_now = 0
+        emitted_view_ids = set()
+        for group in result.groups:
+            self.out_queue.append(group)
+            self.emitted.extend(group.samples)
+            emitted_view_ids.update(s.view_id for s in group.samples)
+            emitted_now += 1
+            self.counters.emitted_groups += 1
+            self.counters.emitted_views += group.size
+        # Buffer keeps only recirculated + previously-unbuffered leftovers.
+        recirc_ids = {s.view_id for s in result.recirculated}
+        self.buffer = [
+            s
+            for s in self.buffer
+            if s.view_id not in emitted_view_ids or s.view_id in recirc_ids
+        ]
+        self.counters.splits += result.splits
+        self.counters.overflow_groups += result.overflowed_groups
+        self.counters.recirculated_views += len(result.recirculated)
+        while emitted_now < target:
+            self.out_queue.append(IDLE)
+            self.counters.idle_slots += 1
+            emitted_now += 1
+        return emitted_now
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """Audit record of one outer protocol round (drives tests/benchmarks)."""
+
+    round_index: int
+    statuses: tuple[int, ...]
+    idx_budgets: tuple[int, ...]
+    target: int
+    emitted_views: int
+    skip_output: bool
+    second_gather: bool
+    potential: int  # Lyapunov Φ = Σ_r (|R|+|Q|+|B|)  (App. C.2)
+
+
+@dataclasses.dataclass
+class IterationResult:
+    """Outcome of one logical sampler iteration."""
+
+    rounds: int
+    emitted_views: int
+    abandoned_views: int  # Σ|U_r| at a non-join stop (Lemma 4 envelope)
+    records: list[RoundRecord]
+    terminated_by: str  # "join_all_finished" | "nonjoin_any_finished"
+
+
+class BoundedTerminationError(RuntimeError):
+    """Round count exceeded the Theorem-4 envelope — a protocol bug."""
+
+
+class OdbProtocolEngine:
+    """Round-synchronous driver of the unified loop over W simulated ranks."""
+
+    def __init__(
+        self,
+        per_rank_views: Sequence[Sequence[Sample]],
+        config: OdbConfig,
+        *,
+        collective: LoopbackCollective | None = None,
+        round_margin: int = 64,
+    ) -> None:
+        world = len(per_rank_views)
+        if world == 0:
+            raise ValueError("need at least one rank")
+        quotas = {len(v) for v in per_rank_views}
+        self.equal_quota = len(quotas) == 1
+        self.config = config
+        self.collective = collective or LoopbackCollective(world)
+        self.ranks = [
+            RankRuntime(r, views, config) for r, views in enumerate(per_rank_views)
+        ]
+        self.records: list[RoundRecord] = []
+        self._round_index = 0
+        # Theorem 4 envelope: q + O(D) rounds. The constant in O(D) covers
+        # drain-rate-1 stragglers (one view per round) plus slack.
+        q = max(len(v) for v in per_rank_views) if per_rank_views else 0
+        self.max_rounds = q + config.depth + round_margin
+
+    @property
+    def world_size(self) -> int:
+        return len(self.ranks)
+
+    def potential(self) -> int:
+        """Lyapunov Φ = M - Σ|E_r| (App. C.2)."""
+        return sum(len(r.pending) + len(r.worker_queue) + len(r.buffer) for r in self.ranks)
+
+    def check_no_leak(self, expected_total: int) -> None:
+        """Lemma 1: R ⊎ Q ⊎ B ⊎ E == D_r at every round, on every rank."""
+        total = sum(r.total_views for r in self.ranks)
+        if total != expected_total:
+            raise AssertionError(
+                f"No-Leak invariant violated: {total} != {expected_total}"
+            )
+
+    # -- one outer round -----------------------------------------------------------
+    def run_round(self) -> RoundRecord:
+        cfg = self.config
+        # Phase 1: fetch/drain on every unfinished rank.
+        for rank in self.ranks:
+            if not rank.local_finished:
+                rank.fetch_and_drain()
+
+        # Phase 2: candidate groups + primary all_gather payloads (Lemma 3:
+        # one unconditional gather per round, on every rank).
+        candidates: list[list[Group]] = []
+
+        def payload(r: int):
+            groups = [] if self.ranks[r].local_finished else self.ranks[r].candidate_groups()
+            candidates.append(groups)
+            status = -1 if self.ranks[r].local_finished else self.ranks[r].status_code(groups)
+            sizes = [g.size for g in groups]
+            tokens = [g.real_tokens for g in groups]
+            return {
+                "idx_budget": len(self.ranks[r].pending),
+                "n_groups": status,
+                "sizes": sizes,
+                "tokens": tokens,
+            }
+
+        gathered = self.collective.gather_round(payload)
+        statuses = tuple(p["n_groups"] for p in gathered)
+        idx_budgets = tuple(p["idx_budget"] for p in gathered)
+
+        # Phase 3: alignment target over active ranks (identical on all ranks:
+        # pure function of the gathered tensor).
+        states = [
+            RankAlignmentState(
+                groups=tuple(candidates[r]),
+                capacity=self.ranks[r].free_slots,
+                buffered=len(self.ranks[r].buffer),
+            )
+            for r in range(self.world_size)
+        ]
+        active_states = [s for s in states if s.group_count > 0]
+        target = alignment_target(active_states) if active_states else 0
+        skip_output = target == 0
+
+        emitted_views = 0
+        alignment_noop = True
+        if not skip_output:
+            for r, state in enumerate(states):
+                if state.group_count > 0 and state.capacity > 0:
+                    result = align_rank(state, target)
+                    if result.splits or result.overflowed_groups:
+                        alignment_noop = False
+                    before = self.ranks[r].counters.emitted_views
+                    self.ranks[r].emit_aligned(result, target)
+                    emitted_views += self.ranks[r].counters.emitted_views - before
+                else:
+                    # Inactive (or zero-capacity) rank: pad with IDLE to keep
+                    # per-step positions aligned.
+                    alignment_noop = False
+                    empty = AlignmentResult(
+                        groups=(), recirculated=(), splits=0, overflowed_groups=0
+                    )
+                    self.ranks[r].emit_aligned(empty, target)
+
+        # Phase 4 (optional, deterministic predicate φ over the shared
+        # tensors): second gather re-broadcasting post-alignment token counts
+        # for exact token-level loss scaling (App. B).  All-or-none (Lemma 3).
+        second = bool(
+            cfg.exact_token_scaling and not skip_output and not alignment_noop
+        )
+        if second:
+            self.collective.gather_round(
+                lambda r: {
+                    "post_tokens": [
+                        (0 if g is IDLE else g.real_tokens)
+                        for g in list(self.ranks[r].out_queue)[-target:]
+                    ]
+                },
+                tag="secondary",
+            )
+
+        # Phase 5: join-mode local-finish advertisement for the *next* round.
+        for rank in self.ranks:
+            if (
+                not rank.pending
+                and not rank.worker_queue
+                and not rank.buffer
+            ):
+                rank.local_finished = True
+
+        record = RoundRecord(
+            round_index=self._round_index,
+            statuses=statuses,
+            idx_budgets=idx_budgets,
+            target=target,
+            emitted_views=emitted_views,
+            skip_output=skip_output,
+            second_gather=second,
+            potential=self.potential(),
+        )
+        self.records.append(record)
+        self._round_index += 1
+        return record
+
+    # -- full logical iteration ---------------------------------------------------
+    def run_iteration(self) -> IterationResult:
+        """Run rounds until the mode-specific termination predicate fires."""
+        expected_total = sum(r.total_views for r in self.ranks)
+        start_round = self._round_index
+        emitted_start = sum(len(r.emitted) for r in self.ranks)
+        terminated_by = ""
+        while True:
+            if self._round_index - start_round > self.max_rounds:
+                raise BoundedTerminationError(
+                    f"exceeded Theorem-4 envelope of {self.max_rounds} rounds "
+                    f"(Φ={self.potential()})"
+                )
+            record = self.run_round()
+            self.check_no_leak(expected_total)
+            if self.config.join_mode:
+                if all(s == -1 for s in record.statuses):
+                    terminated_by = "join_all_finished"
+                    break
+            else:
+                if any(s == -1 for s in record.statuses):
+                    terminated_by = "nonjoin_any_finished"
+                    break
+        abandoned = sum(r.outstanding for r in self.ranks)
+        emitted = sum(len(r.emitted) for r in self.ranks) - emitted_start
+        return IterationResult(
+            rounds=self._round_index - start_round,
+            emitted_views=emitted,
+            abandoned_views=abandoned,
+            records=self.records[start_round:],
+            terminated_by=terminated_by,
+        )
+
+    # -- trainer-facing step stream ------------------------------------------------
+    def aligned_steps(self) -> Iterator[list[Group | None]]:
+        """Yield step-aligned per-rank batches (Group or IDLE) in order.
+
+        Queue lengths are equal across ranks after every round by
+        construction (every round appends exactly ``target`` entries to every
+        rank's queue), so the zip below is the SPMD step schedule.
+        """
+        lengths = {len(r.out_queue) for r in self.ranks}
+        if len(lengths) != 1:
+            raise ProtocolDesyncError(f"unaligned output queues: {lengths}")
+        steps = lengths.pop()
+        for _ in range(steps):
+            yield [r.out_queue.popleft() for r in self.ranks]
+
+
+# ---------------------------------------------------------------------------------
+# Epoch-level runners (trainer-side control logic).
+# ---------------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EpochAudit:
+    """Terminal audit quantities of §C.5/C.6 and Theorems 1/2."""
+
+    dataset_identities: int  # N
+    world_size: int  # W
+    sampler_views: int  # M = W * ceil(N/W)
+    emitted_views: int  # S_emit (trainer-side cumulative)
+    emitted_identities: int  # |∪_r IDs_r|
+    surplus_emits: int  # Σ|emits_r| - N  (vs deterministic padding P)
+    logical_iterations: int
+    rounds: int
+    abandoned_views_per_iteration: list[int]
+    eta_quota: float  # max(0, 1 - S_emit / N)          (Thm 2)
+    eta_identity: float  # 1 - |∪ IDs| / N              (App. C.6)
+    terminal_epoch: float  # S_emit / N
+
+    @property
+    def padding_views(self) -> int:
+        return self.sampler_views - self.dataset_identities  # P = M - N
+
+
+def run_epoch(
+    make_views: Callable[[int], Sequence[Sequence[Sample]]],
+    dataset_identities: int,
+    config: OdbConfig,
+    *,
+    max_logical_iterations: int = 64,
+    on_step: Callable[[list[Group | None]], None] | None = None,
+    drain_rates: Sequence[int | None] | None = None,
+) -> EpochAudit:
+    """Run one training epoch's worth of sampler quota through the protocol.
+
+    ``make_views(iteration)`` returns the per-rank sampler-view lists for
+    logical iteration ``iteration`` (re-shuffled per iteration, mirroring the
+    re-seeded DistributedSampler).  In join mode a single logical iteration
+    emits the full multiset M (Theorem 1).  In non-join mode iterations are
+    chained until ``S_emit >= N`` (Theorem 2).
+    """
+    world = len(make_views(0))
+    n = dataset_identities
+    quota = world * math.ceil(n / world)
+    emitted_total = 0
+    emitted_ids: set[int] = set()
+    rounds = 0
+    abandoned: list[int] = []
+    iteration = 0
+    while True:
+        views = make_views(iteration)
+        engine = OdbProtocolEngine(views, config)
+        if drain_rates is not None:
+            for rank, rate in zip(engine.ranks, drain_rates):
+                rank.drain_rate = rate
+        result = engine.run_iteration()
+        rounds += result.rounds
+        abandoned.append(result.abandoned_views)
+        quota_crossed = False
+        for step in engine.aligned_steps():
+            real = [g for g in step if g is not IDLE]
+            step_views = sum(g.size for g in real)
+            emitted_total += step_views
+            for g in real:
+                emitted_ids.update(s.identity for s in g.samples)
+            if on_step is not None:
+                on_step(step)
+            if not config.join_mode and emitted_total >= n:
+                # Theorem 2: the final quota crossing happens inside one
+                # aligned step, so S_emit - N <= S_max.  Stop delivering.
+                quota_crossed = True
+                break
+        iteration += 1
+        if config.join_mode:
+            break  # one logical iteration emits the full multiset
+        if quota_crossed or emitted_total >= n:
+            break
+        if iteration >= max_logical_iterations:
+            raise BoundedTerminationError(
+                f"quota not closed after {iteration} logical iterations "
+                f"({emitted_total}/{n})"
+            )
+    return EpochAudit(
+        dataset_identities=n,
+        world_size=world,
+        sampler_views=quota,
+        emitted_views=emitted_total,
+        emitted_identities=len(emitted_ids),
+        surplus_emits=emitted_total - n,
+        logical_iterations=iteration,
+        rounds=rounds,
+        abandoned_views_per_iteration=abandoned,
+        eta_quota=max(0.0, 1.0 - emitted_total / n) if n else 0.0,
+        eta_identity=1.0 - len(emitted_ids) / n if n else 0.0,
+        terminal_epoch=emitted_total / n if n else 0.0,
+    )

@@ -1,0 +1,30 @@
+"""Data substrate: sampler, online pipeline, datasets, loaders, baselines."""
+
+from repro.data.baselines import (
+    packing_schedule,
+    sorted_schedule,
+    standard_schedule,
+)
+from repro.data.datasets import (
+    DATASET_CLONES,
+    SYNTHETIC_DISTRIBUTIONS,
+    DatasetSpec,
+    get_dataset,
+)
+from repro.data.loader import LoaderStep, OnlineDynamicLoader, odb_schedule
+from repro.data.oracles import (
+    LengthCache,
+    StaleCacheError,
+    bmt_schedule,
+    gmt_schedule,
+    hfg_schedule,
+)
+from repro.data.pipeline import (
+    PipelinePolicy,
+    RawRecord,
+    length_cv,
+    realize_lengths,
+    run_pipeline,
+    short_sample_fraction,
+)
+from repro.data.sampler import SamplerSpec, global_view_order, shard_views

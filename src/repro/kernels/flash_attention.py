@@ -1,0 +1,182 @@
+"""Segment-aware causal flash attention — Pallas TPU kernel.
+
+TPU-native adaptation of the paper's packing story (DESIGN.md §2): ODB's
+packed groups need contamination-free attention; on GPU that is a varlen
+CUDA kernel (flash_attn_varlen), on TPU the natural form is *segment-id
+masking fused into a tiled attention kernel*.
+
+Tiling: grid = (batch, q_heads, num_q_blocks, num_kv_blocks), the last axis
+sequential (TPU "arbitrary" dimension semantics) carrying the online-softmax
+accumulators (m, l, acc) in VMEM scratch.  BlockSpecs pull one (block_q × d)
+query tile and one (block_kv × d) key/value tile into VMEM per step; GQA is
+expressed in the k/v index_map (kv head = q head // group).  Causally dead
+(q, kv) block pairs are skipped via ``pl.when``.
+
+Backward: exposed through ``jax.custom_vjp`` in ops.py with the pure-jnp
+reference as the recompute path — the forward kernel is the perf-critical
+piece (prefill / packed-batch forward).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are optional off-TPU / in interpret mode
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+    def _compiler_params():
+        try:
+            return pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+            )
+        except Exception:
+            return None
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+    def _compiler_params():
+        return None
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_body(
+    q_ref, k_ref, v_ref, qseg_ref, kseg_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, scale, causal, block_q, block_kv, num_kv_blocks,
+):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch[...], NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch[...])
+        acc_scratch[...] = jnp.zeros_like(acc_scratch[...])
+
+    if causal:
+        live = qb * block_q + block_q - 1 >= kb * block_kv
+    else:
+        live = True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+        q_pos = qb * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0
+        )
+        k_pos = kb * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1
+        )
+        allowed = jnp.ones((block_q, block_kv), dtype=jnp.bool_)
+        if causal:
+            allowed &= k_pos <= q_pos
+        if qseg_ref is not None:
+            qseg = qseg_ref[...]
+            kseg = kseg_ref[...]
+            allowed &= (qseg[:, None] == kseg[None, :]) & (kseg[None, :] > 0)
+        scores = jnp.where(allowed, scores, NEG_INF)
+
+        m_prev = m_scratch[:, 0]
+        l_prev = l_scratch[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1))
+        safe_m = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+        p = jnp.where(allowed, jnp.exp(scores - safe_m[:, None]), 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF, 0.0, jnp.exp(m_prev - safe_m))
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc = acc_scratch[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        m_scratch[...] = jnp.broadcast_to(m_new[:, None], m_scratch.shape)
+        l_scratch[...] = jnp.broadcast_to(l_new[:, None], l_scratch.shape)
+        acc_scratch[...] = acc
+
+    @pl.when(kb == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scratch[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scratch[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def segment_flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    segment_ids: jax.Array | None = None,  # (B, S) int32; 0 = padding
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    nq, nk = s // block_q, s // block_kv
+    grid = (b, h, nq, nk)
+
+    q_spec = pl.BlockSpec(
+        (None, block_q, None, d), lambda ib, ih, iq, ik: (ib, iq, ih, 0)
+    )
+    kv_spec = pl.BlockSpec(
+        (None, block_kv, None, d), lambda ib, ih, iq, ik: (ib, ik, ih // g, 0)
+    )
+    o_spec = pl.BlockSpec(
+        (None, block_q, None, d), lambda ib, ih, iq, ik: (ib, iq, ih, 0)
+    )
+
+    in_specs = [q_spec, kv_spec, kv_spec]
+    args = [q, k, v]
+    has_seg = segment_ids is not None
+    if has_seg:
+        in_specs.append(pl.BlockSpec((None, block_q), lambda ib, ih, iq, ik: (ib, iq)))
+        in_specs.append(pl.BlockSpec((None, block_kv), lambda ib, ih, iq, ik: (ib, ik)))
+        args.extend([segment_ids, segment_ids])
+
+    body = functools.partial(
+        _flash_body,
+        scale=scale, causal=causal, block_q=block_q,
+        block_kv=block_kv, num_kv_blocks=nk,
+    )
+
+    if has_seg:
+        def kernel(q_ref, k_ref, v_ref, qs, ks, o_ref, m, l, acc):
+            body(q_ref, k_ref, v_ref, qs, ks, o_ref, m, l, acc)
+    else:
+        def kernel(q_ref, k_ref, v_ref, o_ref, m, l, acc):
+            body(q_ref, k_ref, v_ref, None, None, o_ref, m, l, acc)
+
+    scratch = [
+        _VMEM((block_q, 128), jnp.float32),
+        _VMEM((block_q, 128), jnp.float32),
+        _VMEM((block_q, d), jnp.float32),
+    ]
+    kwargs = {}
+    cp = _compiler_params()
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(*args)

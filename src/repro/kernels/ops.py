@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute under ``interpret=True``; on TPU
+they compile through Mosaic.  ``flash_attention`` carries a ``custom_vjp``
+whose backward recomputes through the pure-jnp reference — forward is the
+perf-critical path (prefill / packed-batch serving), and the recompute
+backward keeps training numerically exact while the dedicated bwd kernel is
+out of scope.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import segment_flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def flash_attention(q, k, v, segment_ids=None, causal=True, block_q=128, block_kv=128):
+    return segment_flash_attention(
+        q, k, v, segment_ids,
+        causal=causal, block_q=block_q, block_kv=block_kv, interpret=_on_cpu(),
+    )
+
+
+def _flash_fwd(q, k, v, segment_ids, causal, block_q, block_kv):
+    out = flash_attention(q, k, v, segment_ids, causal, block_q, block_kv)
+    return out, (q, k, v, segment_ids)
+
+
+def _flash_bwd(causal, block_q, block_kv, res, g):
+    q, k, v, segment_ids = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.segment_flash_attention_ref(
+            q_, k_, v_, segment_ids, causal=causal
+        ),
+        q, k, v,
+    )
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def ssd_chunked_scan(x, dt, a, b_proj, c_proj, *, chunk: int = 256):
+    """Kernel-backed SSD: y = SSD(x, dt, a, B, C) with zero initial state."""
+    adt = a[None, None, :] * dt
+    return ssd_scan(
+        x, adt.astype(jnp.float32), dt.astype(jnp.float32), b_proj, c_proj,
+        chunk=chunk, interpret=_on_cpu(),
+    )

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+``segment_flash_attention_ref`` — materializing softmax attention with the
+shared masking contract: allowed iff segments match (0 = padding) and
+(causal ⇒ k_pos ≤ q_pos).  GQA via head grouping.
+
+``ssd_scan_ref`` — sequential (token-by-token) state-space recurrence, the
+mathematical definition the chunked SSD kernel must reproduce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def segment_flash_attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    segment_ids: jax.Array | None = None,  # (B, S) int32; 0 = padding
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    allowed = jnp.ones((b, s, s), dtype=bool)
+    if causal:
+        pos = jnp.arange(s)
+        allowed &= pos[None, None, :] <= pos[None, :, None]
+    if segment_ids is not None:
+        allowed &= (segment_ids[:, :, None] == segment_ids[:, None, :]) & (
+            segment_ids[:, None, :] > 0
+        )
+    scores = jnp.where(allowed[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) positive
+    a: jax.Array,  # (H,) negative decay rates
+    b_proj: jax.Array,  # (B, S, N)
+    c_proj: jax.Array,  # (B, S, N)
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Token-level recurrence: h_t = exp(a·dt_t)·h_{t-1} + dt_t·B_t⊗x_t;
+    y_t = C_t · h_t.  Returns (y (B,S,H,P), final_state)."""
+    bsz, s, h, p = x.shape
+    n = b_proj.shape[-1]
+    state0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs
+        decay = jnp.exp(a[None, :] * dtt)  # (B, H)
+        upd = jnp.einsum(
+            "bn,bh,bhp->bhpn",
+            bt.astype(jnp.float32),
+            dtt.astype(jnp.float32),
+            xt.astype(jnp.float32),
+        )
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        b_proj.transpose(1, 0, 2),
+        c_proj.transpose(1, 0, 2),
+    )
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  For each cell we:
+
+  1. build the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. build the step function with full shardings (launch/steps.py),
+  3. ``jit(...).lower(*ShapeDtypeStructs).compile()`` — no allocation,
+  4. print ``compiled.memory_analysis()`` (proves the HBM budget) and
+     ``compiled.cost_analysis()`` (FLOPs / bytes for §Roofline),
+  5. parse collective bytes out of the optimized HLO and persist one JSON
+     artifact per cell under ``artifacts/dryrun/`` for the roofline tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--list]
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPE_ORDER, SHAPES, applicability
+from repro.launch.steps import build_decode_step, build_prefill_step, build_train_step
+from repro.models.model import LM
+from repro.roofline.analysis import model_flops_for_cell, roofline_from_artifacts
+from repro.roofline.hlo_cost import analyze as hlo_analyze
+from repro.train.optimizer import OptimizerConfig
+
+ARTIFACT_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def opt_config_for(cfg) -> OptimizerConfig:
+    # bf16 moments for the giants — the HBM lever (DESIGN.md §7).
+    mdt = "bfloat16" if cfg.param_count() > 8e9 else "float32"
+    return OptimizerConfig(moment_dtype=mdt)
+
+
+def builder_for(model: LM, mesh, cell):
+    if cell.kind == "train":
+        return build_train_step(model, mesh, cell, opt_config_for(model.cfg))
+    if cell.kind == "prefill":
+        return build_prefill_step(model, mesh, cell)
+    return build_decode_step(model, mesh, cell)
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    *,
+    verbose: bool = True,
+    variant: dict | None = None,
+    tag: str = "",
+) -> dict:
+    cfg = get_config(arch)
+    if variant:
+        cfg = dataclasses.replace(cfg, **variant)
+    cell = SHAPES[shape]
+    ok, reason = applicability(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": mesh_name, "status": "skip", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    model = LM(cfg, mesh=mesh)
+    record: dict = {"arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips}
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            fn, abstract_args, _ = builder_for(model, mesh, cell)
+            lowered = fn.lower(*abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+    except Exception as exc:  # a failure here is a bug in the system
+        record.update(status="error", error=f"{type(exc).__name__}: {exc}",
+                      traceback=traceback.format_exc()[-4000:])
+        return record
+
+    import gzip
+
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    hlo_path = ARTIFACT_DIR / f"{arch}__{shape}__{mesh_name}{suffix}.hlo.txt.gz"
+    hlo_path.write_bytes(gzip.compress(hlo.encode()))
+
+    parsed = hlo_analyze(hlo)  # per-device, trip-count-corrected
+    mflops = model_flops_for_cell(cfg, cell)
+    terms = roofline_from_artifacts(arch, shape, mesh_name, chips, parsed, mflops)
+    # Memory usefulness: minimal per-device bytes one step must touch
+    # (param reads + optimizer traffic for train; params + cache for decode).
+    params_bytes = cfg.param_count() * 2.0 / chips  # bf16, fully sharded ideal
+    if cell.kind == "train":
+        useful_bytes = params_bytes * (3 + 2 + 4)  # read fwd+bwd grads + opt m/v rw
+    else:
+        useful_bytes = params_bytes
+    mem_useful = useful_bytes / parsed["hbm_bytes"] if parsed["hbm_bytes"] else 0.0
+    mem_fields = {}
+    for field in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        mem_fields[field] = getattr(mem, field, None)
+    args_b = mem_fields.get("argument_size_in_bytes") or 0
+    temp_b = mem_fields.get("temp_size_in_bytes") or 0
+    alias_b = mem_fields.get("alias_size_in_bytes") or 0
+    out_b = mem_fields.get("output_size_in_bytes") or 0
+    # memory_analysis is per-device already (SPMD module view):
+    # live bytes = arguments + temps + (outputs not aliased into arguments).
+    per_device = args_b + temp_b + max(out_b - alias_b, 0)
+
+    record.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=mem_fields,
+        bytes_per_device=per_device,
+        xla_cost={k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost},
+        parsed_cost={k: parsed[k] for k in ("flops", "hbm_bytes", "coll_bytes", "transcendentals")},
+        per_collective=parsed["per_collective"],
+        roofline=dict(terms.row(), mem_useful_ratio=mem_useful),
+    )
+    if verbose:
+        print(
+            f"[{arch} × {shape} × {mesh_name}] compile {t_compile:.0f}s | "
+            f"{per_device/1e9:.2f} GB/device | "
+            f"flops {terms.hlo_flops:.3e} | coll {terms.coll_bytes:.3e} B | "
+            f"dominant={terms.dominant} | roofline_frac={terms.roofline_fraction:.3f}",
+            flush=True,
+        )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPE_ORDER)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for a in archs:
+            cfg = get_config(a)
+            for s in shapes:
+                ok, reason = applicability(cfg, s)
+                print(f"{a:18s} {s:12s} {'RUN' if ok else 'SKIP: ' + reason}")
+        return
+
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                out = ARTIFACT_DIR / f"{a}__{s}__{m}.json"
+                if out.exists() and not args.force:
+                    cached = json.loads(out.read_text())
+                    if cached.get("status") in ("ok", "skip"):
+                        print(f"[{a} × {s} × {m}] cached: {cached['status']}", flush=True)
+                        continue
+                rec = run_cell(a, s, m)
+                out.write_text(json.dumps(rec, indent=2, default=str))
+                if rec["status"] == "error":
+                    failures += 1
+                    print(f"[{a} × {s} × {m}] ERROR: {rec['error']}", flush=True)
+                elif rec["status"] == "skip":
+                    print(f"[{a} × {s} × {m}] SKIP: {rec['reason']}", flush=True)
+    print(f"dry-run complete; {failures} failures", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

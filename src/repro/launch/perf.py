@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""§Perf hillclimb driver: re-lower a cell under an optimization variant and
+report the roofline-term deltas vs the cached baseline artifact.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell yi_34b:train_4k \
+        --variant headshard
+
+Variants (config-level levers; DESIGN.md §8 / EXPERIMENTS.md §Perf):
+  headshard   attn_head_constraint=True   (uneven head sharding annotation)
+  ce_bf16     logits_fp32=False           (bf16 logits + cross-entropy)
+  sp          sequence_sharding=True      (sequence-parallel residual stream)
+  sp_ce       sp + ce_bf16
+  all         headshard + sp + ce_bf16
+  remat_none  remat="none"                (no rematerialization)
+  remat_dots  remat="dots"                (save matmul outputs only)
+"""
+
+import argparse
+import json
+import pathlib
+
+VARIANTS = {
+    "headshard": {"attn_head_constraint": True},
+    "ce_bf16": {"logits_fp32": False},
+    "sp": {"sequence_sharding": True},
+    "sp_ce": {"sequence_sharding": True, "logits_fp32": False},
+    "all": {
+        "attn_head_constraint": True,
+        "sequence_sharding": True,
+        "logits_fp32": False,
+    },
+    "sp_ce_dots": {
+        "sequence_sharding": True,
+        "logits_fp32": False,
+        "remat": "dots",
+    },
+    "remat_none": {"remat": "none"},
+    "remat_dots": {"remat": "dots"},
+}
+
+
+def main() -> None:
+    from repro.launch.dryrun import ARTIFACT_DIR, run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    arch, shape = args.cell.split(":")
+    base_path = ARTIFACT_DIR / f"{arch}__{shape}__{args.mesh}.json"
+    base = json.loads(base_path.read_text()) if base_path.exists() else None
+
+    rec = run_cell(
+        arch, shape, args.mesh, variant=VARIANTS[args.variant], tag=args.variant
+    )
+    out = ARTIFACT_DIR / f"{arch}__{shape}__{args.mesh}__{args.variant}.json"
+    out.write_text(json.dumps(rec, indent=2, default=str))
+    if rec["status"] != "ok":
+        print(f"variant FAILED: {rec.get('error')}")
+        raise SystemExit(1)
+
+    if base and base.get("status") == "ok":
+        b, v = base["roofline"], rec["roofline"]
+        print(f"\n{arch} × {shape} × {args.mesh}: baseline → {args.variant}")
+        for term in ("compute_s", "memory_s", "collective_s"):
+            delta = (v[term] - b[term]) / b[term] * 100 if b[term] else float("nan")
+            print(f"  {term:14s} {b[term]:.3e} → {v[term]:.3e}  ({delta:+.1f}%)")
+        bt = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        vt = max(v["compute_s"], v["memory_s"], v["collective_s"])
+        print(f"  bound_time     {bt:.3e} → {vt:.3e}  ({(vt-bt)/bt*100:+.1f}%)")
+        print(f"  roofline_frac  {b['roofline_fraction']:.4f} → {v['roofline_fraction']:.4f}")
+        print(f"  GB/device      {base['bytes_per_device']/1e9:.1f} → {rec['bytes_per_device']/1e9:.1f}")
+
+
+if __name__ == "__main__":
+    main()

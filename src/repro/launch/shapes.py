@@ -1,0 +1,72 @@
+"""Assigned input-shape cells and their applicability rules (DESIGN.md §4).
+
+LM transformer shapes are seq_len × global_batch; ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a filled KV cache), NOT
+``train_step``; ``prefill_*`` lowers the prompt-encoding serve path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def applicability(cfg, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason).  Skips are recorded in EXPERIMENTS.md §Dry-run."""
+    cell = SHAPES[shape_name]
+    if cell.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only arch has no autoregressive decode step"
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k needs sub-quadratic attention; skipped for pure "
+            "full-attention archs (DESIGN.md §4)"
+        )
+    return True, ""
+
+
+def train_batch_specs(cfg, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for one global training batch."""
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.input_embeds:
+        return {
+            "embeds": ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            "labels": ShapeDtypeStruct((b, s), jnp.int32),
+            "loss_mask": ShapeDtypeStruct((b, s), jnp.float32),
+        }
+    return {
+        "tokens": ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": ShapeDtypeStruct((b, s), jnp.int32),
+        "loss_mask": ShapeDtypeStruct((b, s), jnp.float32),
+    }
+
+
+def prefill_token_specs(cfg, cell: ShapeCell):
+    if cfg.input_embeds:
+        return ShapeDtypeStruct(
+            (cell.global_batch, cell.seq_len, cfg.d_model), jnp.bfloat16
+        )
+    return ShapeDtypeStruct((cell.global_batch, cell.seq_len), jnp.int32)
+
+
+def decode_token_specs(cell: ShapeCell):
+    return ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)

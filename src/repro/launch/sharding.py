@@ -1,0 +1,190 @@
+"""Sharding rules: logical roles → mesh PartitionSpecs (DESIGN.md §7).
+
+Conventions:
+  * ``model`` axis: TP (attention heads / FFN hidden / vocab) and EP
+    (expert slabs).
+  * ``data`` axis: DP for activations; FSDP storage axis for params of
+    archs above ``FSDP_THRESHOLD`` (GSPMD inserts the weight all-gather /
+    grad reduce-scatter automatically, incl. at shard_map boundaries).
+  * ``pod`` axis: pure DP — params replicated across pods so weight
+    gathers never cross the DCN; only gradient reduction does.
+  * Input shardings must divide evenly (pjit requirement) — every rule
+    checks divisibility and falls back to replication; intermediates may
+    be uneven (GSPMD pads).
+
+Cache layout choices (small-kv archs, kv=8 < TP=16): shard the head_dim
+(128/16) instead of the kv-head dim; MLA latent caches are replicated over
+`model` (they are small — that is MLA's point).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def _div(n: int, mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size > 0 and n % size == 0
+
+
+FSDP_THRESHOLD = 8e9  # params; above this, weights store FSDP over `data`
+
+
+def use_fsdp(cfg) -> bool:
+    return cfg.param_count() > FSDP_THRESHOLD
+
+
+# -----------------------------------------------------------------------------
+# Parameter specs
+# -----------------------------------------------------------------------------
+
+_REPLICATED_KEYS = {
+    "scale", "q_norm", "k_norm", "kv_norm", "out_norm", "dt_bias", "a_log",
+    "d_skip", "conv_w", "router",
+}
+_COL_PARALLEL = {"wq", "wk", "wv", "w_uq", "in_z", "in_x"}  # (d_in, tp_out)
+_ROW_PARALLEL = {"wo", "out_proj"}  # (tp_in, d_out)
+_LATENT_DOWN = {"w_dq", "w_dkv", "in_b", "in_c", "in_dt"}  # (d_in, small)
+_LATENT_UP = {"w_uk", "w_uv"}  # (latent, tp_out)
+
+
+def _param_spec(path_keys: list[str], shape: tuple[int, ...], mesh, fsdp: bool):
+    name = path_keys[-1]
+    in_stack = "stack" in path_keys
+    f = "data" if (fsdp and "data" in mesh.axis_names) else None
+
+    def fx(dim: int):
+        return f if (f and _div(dim, mesh, f)) else None
+
+    def tp(dim: int):
+        return "model" if _div(dim, mesh, "model") else None
+
+    base_shape = shape[1:] if in_stack else shape
+    nd = len(base_shape)
+
+    if name in _REPLICATED_KEYS or nd <= 1:
+        spec: tuple = (None,) * nd
+    elif name == "embed":
+        spec = (tp(base_shape[0]), fx(base_shape[1]))
+    elif name == "unembed":
+        spec = (fx(base_shape[0]), tp(base_shape[1]))
+    elif nd == 3 and name in ("w_in", "w_gate"):  # expert slab (E, d, ff)
+        spec = (tp(base_shape[0]), fx(base_shape[1]), None)
+    elif nd == 3 and name == "w_out":  # expert slab (E, ff, d)
+        spec = (tp(base_shape[0]), None, fx(base_shape[2]))
+    elif name in ("w_in", "w_gate"):  # dense MLP (d, ff)
+        spec = (fx(base_shape[0]), tp(base_shape[1]))
+    elif name == "w_out":  # dense MLP (ff, d)
+        spec = (tp(base_shape[0]), fx(base_shape[1]))
+    elif name in _COL_PARALLEL:
+        spec = (fx(base_shape[0]), tp(base_shape[1]))
+    elif name in _ROW_PARALLEL:
+        spec = (tp(base_shape[0]), fx(base_shape[1]))
+    elif name in _LATENT_DOWN:
+        spec = (fx(base_shape[0]), None)
+    elif name in _LATENT_UP:
+        spec = (None, tp(base_shape[1]))
+    else:
+        spec = (None,) * nd
+    if in_stack:
+        spec = (None,) + spec
+    return P(*spec)
+
+
+def _path_keys(path) -> list[str]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+        elif hasattr(p, "name"):
+            keys.append(str(p.name))
+    return keys
+
+
+def param_specs(params_tree, cfg, mesh):
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays)."""
+    fsdp = use_fsdp(cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(_path_keys(path), leaf.shape, mesh, fsdp),
+        params_tree,
+    )
+
+
+def opt_state_specs(opt_shapes, param_spec_tree):
+    return {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "step": P(),
+    }
+
+
+# -----------------------------------------------------------------------------
+# Batch / cache specs
+# -----------------------------------------------------------------------------
+
+
+def batch_dp_axes(global_batch: int, mesh):
+    """Largest prefix of the DP axes that divides the batch evenly."""
+    axes = []
+    size = 1
+    for a in dp_axes(mesh):
+        if global_batch % (size * mesh.shape[a]) == 0:
+            axes.append(a)
+            size *= mesh.shape[a]
+    return tuple(axes) if axes else None
+
+
+def batch_specs(batch_tree, mesh):
+    def spec(leaf):
+        dp = batch_dp_axes(leaf.shape[0], mesh)
+        return P(dp, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(spec, batch_tree)
+
+
+def _cache_leaf_spec(path_keys: list[str], shape, cfg, mesh):
+    """Specs for KV / MLA / SSM cache leaves (named tuple fields)."""
+    in_stack = "stack" in path_keys
+    base = shape[1:] if in_stack else shape
+    name = path_keys[-1]
+    dp = batch_dp_axes(base[0], mesh)
+    if name in ("k", "v"):  # (B, S, kv, dh)
+        if _div(base[2], mesh, "model"):
+            spec = (dp, None, "model", None)
+        elif _div(base[3], mesh, "model"):
+            spec = (dp, None, None, "model")  # head-dim sharding (kv < TP)
+        else:
+            spec = (dp, None, None, None)
+    elif name in ("ckv", "k_rope"):  # MLA latents: small, replicate on model
+        spec = (dp,) + (None,) * (len(base) - 1)
+    elif name == "state":  # SSM (B, H, P, N)
+        spec = (dp, "model" if _div(base[1], mesh, "model") else None, None, None)
+    elif name == "conv":  # (B, k, channels)
+        spec = (dp, None, "model" if _div(base[2], mesh, "model") else None)
+    else:
+        spec = (dp,) + (None,) * (len(base) - 1)
+    if in_stack:
+        spec = (None,) + spec
+    return P(*spec)
+
+
+def cache_specs(cache_shapes, cfg, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(_path_keys(path), leaf.shape, cfg, mesh),
+        cache_shapes,
+    )
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs)

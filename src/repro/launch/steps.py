@@ -1,0 +1,162 @@
+"""Jitted step functions (train / prefill / decode) with mesh shardings.
+
+``build_*`` returns (jitted_fn, abstract_args, in_shardings) so the same
+builders serve the real trainer, the examples, and the dry-run (which calls
+``.lower(*abstract_args).compile()`` without allocating anything).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shr
+from repro.launch.shapes import (
+    ShapeCell,
+    decode_token_specs,
+    prefill_token_specs,
+    train_batch_specs,
+)
+from repro.models.model import LM, shift_labels
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+Params = Any
+
+
+# -----------------------------------------------------------------------------
+# Train
+# -----------------------------------------------------------------------------
+
+
+def make_train_step(model: LM, opt_cfg: OptimizerConfig):
+    """(state, batch) -> (state, metrics).
+
+    Loss normalization: the global masked per-token mean — identical to the
+    paper's exact token-level scaled objective (Eq. 2 collapses to the global
+    per-token mean in SPMD; bit-exactness of the per-rank weighting form is
+    verified separately in tests/test_loss_scaling.py).
+    """
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            loss_sum, tokens = model.loss_sums(params, batch)
+            return loss_sum / jnp.maximum(tokens, 1.0), tokens
+
+        (loss, tokens), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"]
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg
+        )
+        metrics = {"loss": loss, "tokens": tokens, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def abstract_train_state(model: LM, opt_cfg: OptimizerConfig):
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+    return {"params": params, "opt": opt}
+
+
+def train_state_specs(state_shapes, model: LM, mesh):
+    pspecs = shr.param_specs(state_shapes["params"], model.cfg, mesh)
+    return {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs, "step": P()},
+    }
+
+
+def build_train_step(model: LM, mesh, cell: ShapeCell, opt_cfg=None):
+    opt_cfg = opt_cfg or OptimizerConfig()
+    state_shapes = abstract_train_state(model, opt_cfg)
+    batch_shapes = train_batch_specs(model.cfg, cell)
+    state_specs = train_state_specs(state_shapes, model, mesh)
+    batch_specs_ = shr.batch_specs(batch_shapes, mesh)
+    in_shardings = (shr.named(state_specs, mesh), shr.named(batch_specs_, mesh))
+    out_shardings = (
+        shr.named(state_specs, mesh),
+        None,  # metrics: let XLA replicate
+    )
+    fn = jax.jit(
+        make_train_step(model, opt_cfg),
+        in_shardings=in_shardings,
+        out_shardings=out_shardings,
+        donate_argnums=(0,),
+    )
+    return fn, (state_shapes, batch_shapes), in_shardings
+
+
+# -----------------------------------------------------------------------------
+# Serve: prefill / decode
+# -----------------------------------------------------------------------------
+
+
+def build_prefill_step(model: LM, mesh, cell: ShapeCell, max_len: int | None = None):
+    max_len = max_len or cell.seq_len
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    tokens_shape = prefill_token_specs(model.cfg, cell)
+    pspecs = shr.param_specs(params_shapes, model.cfg, mesh)
+    tspec = shr.batch_specs(tokens_shape, mesh)
+
+    def prefill(params, tokens):
+        if model.cfg.input_embeds:
+            # encoder "prefill" = full encode; logits for every frame
+            logits = model.forward(params, {"embeds": tokens})
+            return logits[:, -1:], None
+        return model.prefill(params, tokens, max_len)
+
+    cache_shapes = None
+    out_shardings = None
+    if model.cfg.has_decode and not model.cfg.input_embeds:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_caches(cell.global_batch, max_len)
+        )
+        cspecs = shr.cache_specs(cache_shapes, model.cfg, mesh)
+        out_shardings = (None, shr.named(cspecs, mesh))
+
+    fn = jax.jit(
+        prefill,
+        in_shardings=(shr.named(pspecs, mesh), shr.named(tspec, mesh)),
+        out_shardings=out_shardings,
+    )
+    return fn, (params_shapes, tokens_shape), (pspecs, tspec)
+
+
+def build_decode_step(model: LM, mesh, cell: ShapeCell, max_len: int | None = None):
+    """One-token serve_step against a KV cache of ``cell.seq_len`` tokens."""
+    max_len = max_len or cell.seq_len
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_caches(cell.global_batch, max_len)
+    )
+    tokens_shape = decode_token_specs(cell)
+    index_shape = jax.ShapeDtypeStruct((), jnp.int32)
+
+    pspecs = shr.param_specs(params_shapes, model.cfg, mesh)
+    cspecs = shr.cache_specs(cache_shapes, model.cfg, mesh)
+    tspec = shr.batch_specs(tokens_shape, mesh)
+
+    def decode(params, caches, tokens, cache_index):
+        return model.decode_step(params, caches, tokens, cache_index)
+
+    fn = jax.jit(
+        decode,
+        in_shardings=(
+            shr.named(pspecs, mesh),
+            shr.named(cspecs, mesh),
+            shr.named(tspec, mesh),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(None, shr.named(cspecs, mesh)),
+        donate_argnums=(1,),
+    )
+    args = (params_shapes, cache_shapes, tokens_shape, index_shape)
+    return fn, args, (pspecs, cspecs, tspec, P())

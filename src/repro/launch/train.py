@@ -1,0 +1,94 @@
+"""Fault-tolerant training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b \
+        --dataset ultrachat --steps 50 --smoke
+
+Wraps the ODB trainer in a resume loop: any crash (preemption, node loss)
+restarts from the latest atomic checkpoint; the loader is stateless across
+restarts (epoch-seeded), and elastic topology changes re-shard on restore
+(train/checkpoint.py).  Straggler mitigation is inherent to the DGAP
+alignment (slow ranks lower T_grp via S_min+/C_min+ instead of stalling the
+step — see tests/test_protocol.py::test_straggler_liveness).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import BucketSpec, OdbConfig
+from repro.data import OnlineDynamicLoader, get_dataset
+from repro.models import LM
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--dataset", default="ultrachat")
+    ap.add_argument("--data-scale", type=float, default=0.002)
+    ap.add_argument("--world", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--l-max", type=int, default=4096)
+    ap.add_argument("--buffer", type=int, default=256)
+    ap.add_argument("--prefetch", type=int, default=64)
+    ap.add_argument("--non-join", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = LM(cfg)
+    loader = OnlineDynamicLoader(
+        get_dataset(args.dataset, scale=args.data_scale),
+        world_size=args.world,
+        config=OdbConfig(
+            l_max=args.l_max, buffer_size=args.buffer,
+            prefetch_factor=args.prefetch, num_workers=4,
+            join_mode=not args.non_join,
+        ),
+        bucket_spec=BucketSpec(min_len=128, max_len=16384, max_count=1024),
+        vocab_size=cfg.vocab_size,
+    )
+    trainer = Trainer(
+        model, loader,
+        OptimizerConfig(total_steps=max(args.steps, 100)),
+        TrainerConfig(
+            checkpoint_dir=args.checkpoint_dir, checkpoint_every=20,
+            log_every=5, max_steps=args.steps,
+        ),
+    )
+
+    restarts = 0
+    while True:
+        try:
+            state, step = trainer.restore_or_init(jax.random.PRNGKey(0))
+            epoch = 0
+            while step < args.steps:
+                state, step = trainer.train_epoch(state, epoch=epoch, start_step=step)
+                epoch += 1
+            break
+        except KeyboardInterrupt:
+            raise
+        except Exception as exc:  # crash -> resume from latest checkpoint
+            restarts += 1
+            print(f"[train] crash ({type(exc).__name__}: {exc}); restart {restarts}")
+            if restarts > args.max_restarts or not args.checkpoint_dir:
+                raise
+
+    for h in trainer.history[-10:]:
+        print(
+            f"step {h['step']:>5}  loss {h['loss']:.4f}  sam/s {h['sam_per_s']:.2f}  "
+            f"pad {100 * h['padding']:.2f}%"
+        )
+    audit = loader.last_audit
+    if audit:
+        print(f"eta_identity={audit.eta_identity} eta_quota={audit.eta_quota}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: composable pure-JAX transformer / MoE / SSD / encoder stacks."""
+
+from repro.models.config import ArchConfig
+from repro.models.model import LM, padded_vocab, shift_labels

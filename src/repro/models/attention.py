@@ -1,0 +1,383 @@
+"""Attention: GQA/MQA/MHA + MLA (DeepSeek-V3), KV caches, segment masking.
+
+Pure-jnp (XLA) path — used for training, prefill and the sharded dry-run.
+The Pallas segment-aware flash kernel in ``repro.kernels`` implements the
+same contract for the packed-batch backend (validated against ``ref.py``).
+
+Memory design: scores are never materialized at (S_q × S_k).  Queries are
+processed in blocks via ``lax.scan`` with the mask computed per block from
+positions/segments (no (B, S, S) bias tensor), and the block body is
+``jax.checkpoint``-ed so the backward pass recomputes per-block probs instead
+of saving them — O(S·block) live attention memory instead of O(S²), the
+pure-XLA analogue of flash attention's tiling.
+
+Masking contract (shared with the Pallas kernel): attention is allowed iff
+``segment_ids`` match (padding carries segment 0) AND (causal ⇒ key position
+≤ query position).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+Params = dict[str, Any]
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, n_kv, d_head)
+    v: jax.Array  # (B, S_max, n_kv, d_head)
+
+
+class MLACache(NamedTuple):
+    ckv: jax.Array  # (B, S_max, kv_lora_rank) — compressed latent
+    k_rope: jax.Array  # (B, S_max, qk_rope_dim) — shared rope key
+
+
+# ------------------------------------------------------------------------------
+# Parameter construction
+# ------------------------------------------------------------------------------
+
+
+def make_attention_params(key, cfg, dtype) -> Params:
+    if cfg.attn_kind == "mla":
+        return _make_mla_params(key, cfg, dtype)
+    keys = jax.random.split(key, 4)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p: Params = {
+        "wq": dense_init(keys[0], d, h * dh, dtype),
+        "wk": dense_init(keys[1], d, kv * dh, dtype),
+        "wv": dense_init(keys[2], d, kv * dh, dtype),
+        "wo": dense_init(keys[3], h * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype=dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype=dtype)
+    return p
+
+
+def _make_mla_params(key, cfg, dtype) -> Params:
+    keys = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": dense_init(keys[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), dtype=dtype),
+        "w_uq": dense_init(keys[1], cfg.q_lora_rank, h * (nope + rope), dtype),
+        "w_dkv": dense_init(keys[2], d, cfg.kv_lora_rank + rope, dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), dtype=dtype),
+        "w_uk": dense_init(keys[3], cfg.kv_lora_rank, h * nope, dtype),
+        "w_uv": dense_init(keys[4], cfg.kv_lora_rank, h * vdim, dtype),
+        "wo": dense_init(keys[5], h * vdim, d, dtype),
+    }
+
+
+# ------------------------------------------------------------------------------
+# Block masking
+# ------------------------------------------------------------------------------
+
+
+def _block_mask(
+    q_pos,  # (B, qb)
+    k_pos,  # (B, Sk)
+    q_seg,  # (B, qb) | None
+    k_seg,  # (B, Sk) | None
+    k_limit,  # scalar | None — keys at positions >= limit are invalid (cache)
+    causal: bool,
+):
+    """(B, qb, Sk) boolean allow-mask computed per query block."""
+    allowed = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    if causal:
+        allowed &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if q_seg is not None and k_seg is not None:
+        allowed &= (q_seg[:, :, None] == k_seg[:, None, :]) & (
+            k_seg[:, None, :] > 0
+        )
+    if k_limit is not None:
+        allowed &= k_pos[:, None, :] < k_limit
+    return allowed
+
+
+def _pick_block(s: int, preferred: int = 256) -> int:
+    for b in (preferred, 128, 64, 32, 16, 8, 4, 2, 1):
+        if b <= s and s % b == 0:
+            return b
+    return 1
+
+
+# ------------------------------------------------------------------------------
+# Blockwise SDPA (GQA layout)
+# ------------------------------------------------------------------------------
+
+
+def _block_sdpa(
+    q,  # (B, Sq, K, G, dh)
+    k,  # (B, Sk, K, dh)
+    v,  # (B, Sk, K, dh)
+    q_pos,  # (B, Sq)
+    k_pos,  # (B, Sk)
+    q_seg,  # (B, Sq) | None
+    k_seg,  # (B, Sk) | None
+    k_limit,  # scalar | None
+    causal: bool,
+    scale: float,
+    q_block: int = 256,
+):
+    b, sq, kh, g, dh = q.shape
+    blk = _pick_block(sq, q_block)
+
+    def block_body(qi, qpi, qsi):
+        scores = (
+            jnp.einsum("bqkgd,bskd->bkgqs", qi, k).astype(jnp.float32) * scale
+        )
+        allowed = _block_mask(qpi, k_pos, qsi, k_seg, k_limit, causal)
+        scores = jnp.where(allowed[:, None, None, :, :], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+    if blk == sq:
+        return block_body(q, q_pos, q_seg)
+
+    nb = sq // blk
+    qb = q.reshape(b, nb, blk, kh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(b, nb, blk).transpose(1, 0, 2)
+    qsb = (
+        q_seg.reshape(b, nb, blk).transpose(1, 0, 2) if q_seg is not None else None
+    )
+
+    def scan_body(_, xs):
+        if qsb is None:
+            qi, qpi = xs
+            qsi = None
+        else:
+            qi, qpi, qsi = xs
+        return None, block_body(qi, qpi, qsi)
+
+    xs = (qb, qpb) if qsb is None else (qb, qpb, qsb)
+    _, outs = jax.lax.scan(jax.checkpoint(scan_body), None, xs)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kh, g, dh)
+
+
+# ------------------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# ------------------------------------------------------------------------------
+
+
+def _head_constraint(t, mesh, head_axis: int):
+    """Annotate per-head tensors with (possibly uneven) `model` sharding so
+    GSPMD keeps head-parallel layout through the reshape instead of falling
+    back to 'involuntary full rematerialization' (replicate-then-reshard) —
+    the yi/arctic 56-head fix (§Perf lever).  Uneven constraints are legal on
+    intermediates (GSPMD pads)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return t
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import batch_dp_axes
+
+    dp = batch_dp_axes(t.shape[0], mesh)
+    spec = [dp] + [None] * (t.ndim - 1)
+    spec[head_axis] = "model"
+    return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, P(*spec)))
+
+
+def gqa_attention(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    positions: jax.Array,  # (B, S)
+    segments: jax.Array | None = None,
+    cache: KVCache | None = None,
+    cache_index: jax.Array | None = None,  # scalar: tokens already in cache
+    mesh=None,
+) -> tuple[jax.Array, KVCache | None]:
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, kv, dh)
+    v = (x @ params["wv"]).reshape(b, s, kv, dh)
+    if cfg.attn_head_constraint:
+        q = _head_constraint(q, mesh, 2)
+        k = _head_constraint(k, mesh, 2)
+        v = _head_constraint(v, mesh, 2)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(b, s, kv, g, dh)
+
+    new_cache = None
+    if cache is not None:
+        assert cache_index is not None
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache_index, axis=1
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache_index, axis=1
+        )
+        new_cache = KVCache(k=ck, v=cv)
+        s_max = ck.shape[1]
+        k_pos = jnp.broadcast_to(
+            jnp.arange(s_max, dtype=positions.dtype), (b, s_max)
+        )
+        out = _block_sdpa(
+            q, ck.astype(q.dtype), cv.astype(q.dtype),
+            positions, k_pos, None, None, cache_index + s, cfg.causal,
+            1.0 / (dh**0.5),
+        )
+    else:
+        out = _block_sdpa(
+            q, k, v, positions, positions, segments, segments, None,
+            cfg.causal, 1.0 / (dh**0.5),
+        )
+    out = out.reshape(b, s, h * dh)
+    return out @ params["wo"], new_cache
+
+
+# ------------------------------------------------------------------------------
+# MLA forward
+# ------------------------------------------------------------------------------
+
+
+def _mla_block_sdpa(
+    q_nope,  # (B, Sq, H, nope)
+    q_rope,  # (B, Sq, H, rope)
+    k_nope,  # (B, Sk, H, nope)
+    k_rope,  # (B, Sk, rope)
+    v,  # (B, Sk, H, vdim)
+    q_pos, k_pos, q_seg, k_seg, k_limit, causal, scale, q_block=256,
+):
+    b, sq, h, _ = q_nope.shape
+
+    def block_body(qn, qr, qpi, qsi):
+        scores = jnp.einsum("bqhd,bshd->bhqs", qn, k_nope).astype(jnp.float32)
+        scores += jnp.einsum("bqhd,bsd->bhqs", qr, k_rope).astype(jnp.float32)
+        scores *= scale
+        allowed = _block_mask(qpi, k_pos, qsi, k_seg, k_limit, causal)
+        scores = jnp.where(allowed[:, None, :, :], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+    blk = _pick_block(sq)
+    if blk == sq:
+        return block_body(q_nope, q_rope, q_pos, q_seg)
+    nb = sq // blk
+    qn = q_nope.reshape(b, nb, blk, h, -1).transpose(1, 0, 2, 3, 4)
+    qr = q_rope.reshape(b, nb, blk, h, -1).transpose(1, 0, 2, 3, 4)
+    qpb = q_pos.reshape(b, nb, blk).transpose(1, 0, 2)
+    qsb = q_seg.reshape(b, nb, blk).transpose(1, 0, 2) if q_seg is not None else None
+
+    def scan_body(_, xs):
+        if qsb is None:
+            a, r, p = xs
+            sgm = None
+        else:
+            a, r, p, sgm = xs
+        return None, block_body(a, r, p, sgm)
+
+    xs = (qn, qr, qpb) if qsb is None else (qn, qr, qpb, qsb)
+    _, outs = jax.lax.scan(jax.checkpoint(scan_body), None, xs)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, -1)
+
+
+def mla_attention(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    positions: jax.Array,
+    segments: jax.Array | None = None,
+    cache: MLACache | None = None,
+    cache_index: jax.Array | None = None,
+) -> tuple[jax.Array, MLACache | None]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / ((nope + rope) ** 0.5)
+
+    cq = rms_norm(x @ params["w_dq"], params["q_norm"])
+    q = (cq @ params["w_uq"]).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ params["w_dkv"]
+    ckv = rms_norm(dkv[..., : cfg.kv_lora_rank], params["kv_norm"])
+    k_rope = apply_rope(
+        dkv[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+
+    if cache is not None and s == 1:
+        # Decode — weight-absorbed latent attention: attend in the compressed
+        # space so per-step cost is O(S·(kv_lora+rope)) per head and the
+        # cache stays (kv_lora + rope) per token (the MLA memory win).
+        assert cache_index is not None
+        cckv = jax.lax.dynamic_update_slice_in_dim(
+            cache.ckv, ckv.astype(cache.ckv.dtype), cache_index, axis=1
+        )
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), cache_index, axis=1
+        )
+        new_cache = MLACache(ckv=cckv, k_rope=ckr)
+        s_max = cckv.shape[1]
+        w_uk = params["w_uk"].reshape(cfg.kv_lora_rank, h, nope)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+        scores = jnp.einsum("bshr,btr->bhst", q_lat, cckv).astype(jnp.float32)
+        scores += jnp.einsum("bshr,btr->bhst", q_rope, ckr).astype(jnp.float32)
+        scores *= scale
+        k_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=positions.dtype), (b, s_max))
+        allowed = (k_pos[:, None, :] <= positions[:, :, None]) & (
+            k_pos[:, None, :] < (cache_index + s)
+        )
+        scores = jnp.where(allowed[:, None, :, :], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cckv.dtype)
+        out_lat = jnp.einsum("bhst,btr->bshr", probs, cckv)
+        w_uv = params["w_uv"].reshape(cfg.kv_lora_rank, h, vdim)
+        out = jnp.einsum("bshr,rhv->bshv", out_lat, w_uv)
+        out = out.reshape(b, s, h * vdim)
+        return out @ params["wo"], new_cache
+
+    # Train / prefill — direct (non-absorbed) form with blockwise SDPA.
+    k_nope = (ckv @ params["w_uk"]).reshape(b, s, h, nope)
+    v = (ckv @ params["w_uv"]).reshape(b, s, h, vdim)
+    new_cache = None
+    if cache is not None:  # prefill fills the latent cache
+        cckv = jax.lax.dynamic_update_slice_in_dim(
+            cache.ckv, ckv.astype(cache.ckv.dtype), cache_index, axis=1
+        )
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), cache_index, axis=1
+        )
+        new_cache = MLACache(ckv=cckv, k_rope=ckr)
+    out = _mla_block_sdpa(
+        q_nope, q_rope, k_nope, k_rope, v,
+        positions, positions, segments, segments, None, cfg.causal, scale,
+    )
+    out = out.reshape(b, s, h * vdim)
+    return out @ params["wo"], new_cache
+
+
+def apply_attention(params, x, cfg, positions, segments=None, cache=None, cache_index=None, mesh=None):
+    if cfg.attn_kind == "mla":
+        return mla_attention(params, x, cfg, positions, segments, cache, cache_index)
+    return gqa_attention(params, x, cfg, positions, segments, cache, cache_index, mesh=mesh)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> KVCache | MLACache:
+    if cfg.attn_kind == "mla":
+        return MLACache(
+            ckv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype=dtype),
+            k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype=dtype),
+        )
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype=dtype),
+        v=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype=dtype),
+    )

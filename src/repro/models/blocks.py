@@ -1,0 +1,166 @@
+"""Layer blocks and the scanned stack plan.
+
+One *layer* = mixer (attention or SSD) + FFN (dense MLP or MoE), pre-norm,
+residual.  Layers are executed under ``jax.lax.scan`` over *units* to keep
+the HLO small at 34B–671B scale:
+
+  * homogeneous stacks (dense / pure-MoE / pure-SSM): unit = 1 layer;
+  * DeepSeek-V3: 3 leading dense layers form an unrolled prefix, the 58 MoE
+    layers scan;
+  * Jamba (hybrid 1:7 + MoE every 2): unit = one 8-layer period (1 attn + 7
+    Mamba, alternating MoE), scanned 9 times.
+
+Caches (KV / MLA / SSM) are stacked with the same unit structure and carried
+through the scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    apply_attention,
+    init_kv_cache,
+    make_attention_params,
+)
+from repro.models.layers import apply_mlp, apply_norm, make_mlp_params, make_norm_params
+from repro.models.moe import make_moe_params, moe_ffn
+from repro.models.ssm import apply_ssm_block, init_ssm_cache, make_ssm_params
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    prefix_layers: tuple[int, ...]  # unrolled leading layer indices
+    unit_layers: tuple[tuple[int, ...], ...]  # scanned units (layer idx tuples)
+
+    @property
+    def n_units(self) -> int:
+        return len(self.unit_layers)
+
+    @property
+    def period(self) -> int:
+        return len(self.unit_layers[0]) if self.unit_layers else 0
+
+
+def stack_plan(cfg) -> StackPlan:
+    prefix = tuple(range(cfg.first_k_dense))
+    rest = list(range(cfg.first_k_dense, cfg.n_layers))
+    period = cfg.attn_period if cfg.family == "hybrid" else 1
+    if cfg.family != "hybrid" and cfg.n_experts and cfg.moe_every > 1:
+        period = cfg.moe_every
+    assert len(rest) % period == 0, (cfg.name, len(rest), period)
+    units = tuple(
+        tuple(rest[i : i + period]) for i in range(0, len(rest), period)
+    )
+    # All units must share a structure signature for scan homogeneity.
+    sigs = {
+        tuple((cfg.layer_kind(l), cfg.layer_is_moe(l)) for l in u) for u in units
+    }
+    assert len(sigs) <= 1, f"inhomogeneous scan units for {cfg.name}: {sigs}"
+    return StackPlan(prefix_layers=prefix, unit_layers=units)
+
+
+# -----------------------------------------------------------------------------
+# Per-layer params / forward
+# -----------------------------------------------------------------------------
+
+
+def make_layer_params(key, cfg, layer_idx: int, dtype) -> Params:
+    keys = jax.random.split(key, 4)
+    kind = cfg.layer_kind(layer_idx)
+    p: Params = {"norm_mixer": make_norm_params(keys[0], cfg, dtype)}
+    if kind == "attn":
+        p["mixer"] = make_attention_params(keys[1], cfg, dtype)
+    else:
+        p["mixer"] = make_ssm_params(keys[1], cfg, dtype)
+    if cfg.layer_is_moe(layer_idx):
+        p["norm_ffn"] = make_norm_params(keys[2], cfg, dtype)
+        p["moe"] = make_moe_params(keys[3], cfg, dtype)
+        if cfg.dense_residual:
+            p["mlp"] = make_mlp_params(keys[3], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+    elif cfg.d_ff:
+        p["norm_ffn"] = make_norm_params(keys[2], cfg, dtype)
+        p["mlp"] = make_mlp_params(keys[3], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+    return p
+
+
+def layer_forward(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    layer_idx: int,
+    positions: jax.Array,
+    segments: jax.Array | None,
+    cache,
+    cache_index,
+    mesh,
+):
+    kind = cfg.layer_kind(layer_idx)
+    h = apply_norm(params["norm_mixer"], x, cfg)
+    if kind == "attn":
+        mixed, new_cache = apply_attention(
+            params["mixer"], h, cfg, positions, segments, cache, cache_index,
+            mesh=mesh,
+        )
+    else:
+        mixed, new_cache = apply_ssm_block(params["mixer"], h, cfg, cache)
+    x = x + mixed
+    if "norm_ffn" not in params:  # FFN-free block (mamba2: SSD mixer only)
+        return x, new_cache
+    h = apply_norm(params["norm_ffn"], x, cfg)
+    if cfg.layer_is_moe(layer_idx):
+        dense_branch = params.get("mlp") if cfg.dense_residual else None
+        ffn = moe_ffn(params["moe"], h, cfg, mesh=mesh, dense_params=dense_branch)
+    else:
+        ffn = apply_mlp(params["mlp"], h, cfg.act, cfg.gated_mlp)
+    return x + ffn, new_cache
+
+
+# -----------------------------------------------------------------------------
+# Unit (scan step): a tuple of layers executed in order
+# -----------------------------------------------------------------------------
+
+
+def make_unit_params(key, cfg, layer_indices, dtype) -> Params:
+    keys = jax.random.split(key, len(layer_indices))
+    return {
+        f"sub{j}": make_layer_params(keys[j], cfg, l, dtype)
+        for j, l in enumerate(layer_indices)
+    }
+
+
+def unit_forward(unit_params, x, cfg, layer_indices, positions, segments, unit_cache, cache_index, mesh):
+    new_caches = {}
+    for j, layer_idx in enumerate(layer_indices):
+        sub_cache = unit_cache.get(f"sub{j}") if unit_cache else None
+        x, nc = layer_forward(
+            unit_params[f"sub{j}"], x, cfg, layer_idx,
+            positions, segments, sub_cache, cache_index, mesh,
+        )
+        if nc is not None:
+            new_caches[f"sub{j}"] = nc
+    return x, (new_caches or None)
+
+
+def init_layer_cache(cfg, layer_idx: int, batch: int, max_len: int, dtype):
+    if cfg.layer_kind(layer_idx) == "attn":
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    return init_ssm_cache(cfg, batch, dtype)
+
+
+def init_unit_cache(cfg, layer_indices, batch: int, max_len: int, dtype) -> Params:
+    return {
+        f"sub{j}": init_layer_cache(cfg, l, batch, max_len, dtype)
+        for j, l in enumerate(layer_indices)
+    }
+
+
+def stack_params(per_unit: list[Params]) -> Params:
+    """Stack identical unit pytrees along a new leading axis (for scan)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_unit)

@@ -1,0 +1,241 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP) over the model axis.
+
+Design (DESIGN.md §7):
+
+  * Router: softmax top-k with renormalization (optionally over sigmoid
+    scores — DeepSeek-V3 aux-free style is approximated by score routing
+    without an aux loss; noted in DESIGN.md).
+  * Dispatch: TPU-native *scatter into capacity buffers* — no (T, E, C)
+    one-hot dispatch einsum (which is O(T·E·C·d) compute) and no dynamic
+    ragged shapes.  Position-in-expert comes from a cumsum over a small
+    (T·K, E_local+1) one-hot; tokens beyond capacity are dropped (GShard
+    semantics, capacity_factor configurable).
+  * Expert parallelism: the FFN runs inside ``shard_map`` over the full mesh.
+    Token activations are data-sharded and *replicated over the model axis*
+    (standard TP activation layout), each model shard owns E/TP experts,
+    computes its partial output locally, and a single ``psum`` over the model
+    axis combines — the same collective a TP MLP already pays, so EP adds no
+    extra collective class.
+  * The shared expert (DeepSeek) and the dense residual MLP (Arctic) run
+    inside the same shard_map as TP-sharded dense MLPs, folded into the same
+    psum.
+  * FSDP composes for free: expert weights may be *stored* sharded over the
+    data axis; the shard_map in_specs request them model-sharded only, so
+    GSPMD inserts the all-gather (fwd) / reduce-scatter (bwd) at the boundary
+    — exactly ZeRO-3 semantics.
+
+When ``mesh`` is None (unit tests / single device) the same dispatch code
+runs over all experts with no collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import act_fn, dense_init
+
+Params = dict[str, Any]
+
+
+def make_moe_params(key, cfg, dtype) -> Params:
+    e, d = cfg.n_experts, cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    keys = jax.random.split(key, 6)
+    p: Params = {
+        "router": dense_init(keys[0], d, e, jnp.float32),
+        "w_in": dense_init(keys[1], d, ff, dtype)[None].repeat(e, 0) * 1.0,
+        "w_gate": dense_init(keys[2], d, ff, dtype)[None].repeat(e, 0) * 1.0,
+        "w_out": dense_init(keys[3], ff, d, dtype)[None].repeat(e, 0) * 1.0,
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = {
+            "w_in": dense_init(keys[4], d, ff * cfg.n_shared_experts, dtype),
+            "w_gate": dense_init(keys[5], d, ff * cfg.n_shared_experts, dtype),
+            "w_out": dense_init(keys[4], ff * cfg.n_shared_experts, d, dtype),
+        }
+    return p
+
+
+def router_topk(x_flat: jax.Array, router_w: jax.Array, top_k: int):
+    """(T, d) -> (T, k) weights + ids.  fp32 routing, renormalized top-k."""
+    logits = x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, ids
+
+
+def _expert_ffn(buf: jax.Array, w_in, w_gate, w_out, act: str) -> jax.Array:
+    """(E_loc, C, d) x (E_loc, d, ff) -> (E_loc, C, d) batched expert MLP."""
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    h = act_fn(act)(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+
+def dispatch_compute_combine(
+    x_flat: jax.Array,  # (T, d) local tokens
+    weights: jax.Array,  # (T, k) fp32
+    ids: jax.Array,  # (T, k) global expert ids
+    w_in: jax.Array,  # (E_loc, d, ff) local expert slab
+    w_gate: jax.Array,
+    w_out: jax.Array,
+    *,
+    e_start: int | jax.Array,
+    capacity: int,
+    act: str,
+) -> jax.Array:
+    """Scatter → batched expert GEMMs → gather-combine for local experts.
+
+    Returns the *partial* output (T, d): contributions of experts outside
+    [e_start, e_start + E_loc) are zero; the caller psums over the EP axis.
+    """
+    t, k = ids.shape
+    n_local = w_in.shape[0]
+    d = x_flat.shape[-1]
+    flat_ids = ids.reshape(-1)  # (T*k,)
+    local = flat_ids - e_start
+    in_range = (local >= 0) & (local < n_local)
+    safe_local = jnp.where(in_range, local, n_local)  # n_local = trash bucket
+    onehot = jax.nn.one_hot(safe_local, n_local + 1, dtype=jnp.int32)
+    slot = (jnp.cumsum(onehot, axis=0) - 1) * onehot
+    slot = slot.sum(axis=1)  # (T*k,) position within expert
+    keep = in_range & (slot < capacity)
+    dest_e = jnp.where(keep, safe_local, n_local)
+    dest_c = jnp.where(keep, slot, 0)
+    token_of = jnp.arange(t * k) // k
+
+    buf = jnp.zeros((n_local + 1, capacity, d), dtype=x_flat.dtype)
+    buf = buf.at[dest_e, dest_c].add(
+        x_flat[token_of] * keep[:, None].astype(x_flat.dtype)
+    )
+    out_buf = _expert_ffn(buf[:n_local], w_in, w_gate, w_out, act)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((1, capacity, d), dtype=out_buf.dtype)], axis=0
+    )
+    gathered = out_buf[dest_e, dest_c]  # (T*k, d)
+    w = (weights.reshape(-1) * keep).astype(gathered.dtype)
+    y = jnp.zeros((t, d), dtype=gathered.dtype)
+    y = y.at[token_of].add(gathered * w[:, None])
+    return y
+
+
+def _dense_tp_mlp(x_flat, shared: Params, act: str) -> jax.Array:
+    """Shared-expert / dense-residual MLP on a local ff slice (TP shard)."""
+    h = x_flat @ shared["w_in"]
+    g = x_flat @ shared["w_gate"]
+    return (act_fn(act)(g) * h) @ shared["w_out"]
+
+
+def moe_capacity(tokens_local: int, top_k: int, n_experts: int, factor: float) -> int:
+    cap = int(tokens_local * top_k / max(n_experts, 1) * factor)
+    return max((cap + 7) // 8 * 8, 8)
+
+
+def moe_ffn(
+    params: Params,
+    x: jax.Array,  # (B, S, d) — global array under jit
+    cfg,
+    mesh=None,
+    dense_params: Params | None = None,  # Arctic dense-residual branch
+    dispatch_chunks: int = 1,
+) -> jax.Array:
+    """MoE FFN; EP/TP over the `model` mesh axis via shard_map when given."""
+    act = cfg.act
+
+    if mesh is None or "model" not in mesh.axis_names or mesh.shape["model"] == 1:
+        b, s, d = x.shape
+        x_flat = x.reshape(-1, d)
+        weights, ids = router_topk(x_flat, params["router"], cfg.top_k)
+        cap = moe_capacity(x_flat.shape[0], cfg.top_k, cfg.n_experts, cfg.capacity_factor)
+        y = dispatch_compute_combine(
+            x_flat, weights, ids,
+            params["w_in"], params["w_gate"], params["w_out"],
+            e_start=0, capacity=cap, act=act,
+        )
+        if "shared" in params:
+            y = y + _dense_tp_mlp(x_flat, params["shared"], act)
+        if dense_params is not None:
+            y = y + _dense_tp_mlp(x_flat, dense_params, act)
+        return y.reshape(b, s, d).astype(x.dtype)
+
+    # DP axes that evenly divide the batch (batch=1 long-context decode is
+    # replicated across data — DESIGN.md §7).
+    dp_list: list[str] = []
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and x.shape[0] % (size * mesh.shape[a]) == 0:
+            dp_list.append(a)
+            size *= mesh.shape[a]
+    dp = tuple(dp_list) if dp_list else None
+    ep = mesh.shape["model"]
+    n_local = cfg.n_experts // ep
+
+    def body(x_loc, router_w, w_in, w_gate, w_out, shared, dense):
+        b, s, d = x_loc.shape
+        x_flat = x_loc.reshape(-1, d)
+        weights, ids = router_topk(x_flat, router_w, cfg.top_k)
+        cap = moe_capacity(x_flat.shape[0], cfg.top_k, cfg.n_experts, cfg.capacity_factor)
+        e_start = jax.lax.axis_index("model") * n_local
+        if dispatch_chunks > 1 and x_flat.shape[0] % dispatch_chunks == 0:
+            xc = x_flat.reshape(dispatch_chunks, -1, d)
+            wc = weights.reshape(dispatch_chunks, -1, cfg.top_k)
+            ic = ids.reshape(dispatch_chunks, -1, cfg.top_k)
+            cap_c = moe_capacity(
+                xc.shape[1], cfg.top_k, cfg.n_experts, cfg.capacity_factor
+            )
+            def chunk(_, args):
+                xf, wf, idf = args
+                return None, dispatch_compute_combine(
+                    xf, wf, idf, w_in, w_gate, w_out,
+                    e_start=e_start, capacity=cap_c, act=act,
+                )
+            _, yc = jax.lax.scan(chunk, None, (xc, wc, ic))
+            y = yc.reshape(-1, d)
+        else:
+            y = dispatch_compute_combine(
+                x_flat, weights, ids, w_in, w_gate, w_out,
+                e_start=e_start, capacity=cap, act=act,
+            )
+        if shared is not None:
+            y = y + _dense_tp_mlp(x_flat, shared, act)
+        if dense is not None:
+            y = y + _dense_tp_mlp(x_flat, dense, act)
+        y = jax.lax.psum(y, "model")
+        return y.reshape(b, s, d).astype(x_loc.dtype)
+
+    shared = params.get("shared")
+    shared_specs = (
+        {"w_in": P(None, "model"), "w_gate": P(None, "model"), "w_out": P("model", None)}
+        if shared is not None
+        else None
+    )
+    dense_specs = (
+        {"w_in": P(None, "model"), "w_gate": P(None, "model"), "w_out": P("model", None)}
+        if dense_params is not None
+        else None
+    )
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, None),  # x
+            P(None, None),  # router (replicated)
+            P("model", None, None),  # expert slabs: EP over model
+            P("model", None, None),
+            P("model", None, None),
+            shared_specs,
+            dense_specs,
+        ),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )
+    return fn(
+        x, params["router"], params["w_in"], params["w_gate"], params["w_out"],
+        shared, dense_params,
+    )

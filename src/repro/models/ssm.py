@@ -1,0 +1,205 @@
+"""Mamba-2 block — SSD (state-space duality) chunked form (arXiv:2405.21060).
+
+Pure-jnp implementation structured as a scan over sequence chunks so the
+within-chunk quadratic ``L`` matrix never materializes across the whole
+sequence (essential for the 524k-token long-context cells).  The Pallas
+kernel in ``repro.kernels.ssd_scan`` fuses the same chunk body; this module
+is also its numerical oracle's twin (see kernels/ref.py).
+
+Layout notes (TP over the `model` axis, DESIGN.md §7):
+  * z/x projections shard the inner dim; per-head tensors shard heads —
+    uneven head counts (mamba2-130m: 24 heads) are left to GSPMD padding;
+  * B/C (state projections, ngroups=1) are small and replicated;
+  * the inter-chunk recurrence carries (h, p, n) state per sequence — no
+    cross-device communication inside the scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+Params = dict[str, Any]
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array  # (B, H, P, N) inter-chunk / decode SSM state
+    conv: jax.Array  # (B, d_conv - 1, conv_channels) rolling conv window
+
+
+def make_ssm_params(key, cfg, dtype) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_ssm_heads
+    keys = jax.random.split(key, 8)
+    conv_ch = di + 2 * n
+    return {
+        "in_z": dense_init(keys[0], d, di, dtype),
+        "in_x": dense_init(keys[1], d, di, dtype),
+        "in_b": dense_init(keys[2], d, n, dtype),
+        "in_c": dense_init(keys[3], d, n, dtype),
+        "in_dt": dense_init(keys[4], d, h, dtype),
+        "conv_w": (jax.random.normal(keys[5], (cfg.d_conv, conv_ch)) * 0.1).astype(dtype),
+        "dt_bias": jnp.zeros((h,), dtype=jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), dtype=jnp.float32),
+        "out_norm": jnp.ones((di,), dtype=dtype),
+        "out_proj": dense_init(keys[6], di, d, dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, init: jax.Array | None):
+    """x: (B, S, C); w: (K, C). Left-pad with `init` (or zeros) — causal."""
+    k = w.shape[0]
+    if init is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), dtype=x.dtype)
+    else:
+        pad = init.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out, xp[:, -(k - 1) :, :] if k > 1 else pad
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = Σ_{j<k<=i} a_k."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j) = Σ_{j<k<=i}
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) — positive (post-softplus)
+    a: jax.Array,  # (H,) negative decay rates
+    b_proj: jax.Array,  # (B, S, N)
+    c_proj: jax.Array,  # (B, S, N)
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Chunked SSD scan; returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_proj.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_proj = jnp.pad(b_proj, ((0, 0), (0, pad), (0, 0)))
+        c_proj = jnp.pad(c_proj, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = b_proj.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c_proj.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def chunk_body(state, inputs):
+        xq, dtq, bq, cq = inputs  # (B, Q, H, P), (B, Q, H), (B, Q, N), (B, Q, N)
+        adt = (a[None, None, :] * dtq).astype(jnp.float32)  # (B, Q, H)
+        acs = jnp.cumsum(adt, axis=1)  # (B, Q, H)
+        # Diagonal (within-chunk) term: decay matrix L.
+        l_mat = jnp.exp(_segsum(adt.transpose(0, 2, 1)))  # (B, H, Q, Q)
+        scores = jnp.einsum("bqn,bsn->bqs", cq.astype(jnp.float32), bq.astype(jnp.float32))
+        y_diag = jnp.einsum(
+            "bhqs,bqs,bsh,bshp->bqhp",
+            l_mat,
+            scores,
+            dtq.astype(jnp.float32),
+            xq.astype(jnp.float32),
+        )
+        # Off-diagonal: contribution of the carried state.
+        state_decay = jnp.exp(acs)  # (B, Q, H)
+        y_off = jnp.einsum(
+            "bqn,bqh,bhpn->bqhp", cq.astype(jnp.float32), state_decay, state
+        )
+        # Update the carried state with this chunk.
+        chunk_decay = jnp.exp(acs[:, -1:, :] - acs)  # (B, Q, H)
+        new_state = state * jnp.exp(acs[:, -1, :])[:, :, None, None]
+        new_state += jnp.einsum(
+            "bqn,bqh,bqhp->bhpn",
+            bq.astype(jnp.float32),
+            (chunk_decay * dtq).astype(jnp.float32),
+            xq.astype(jnp.float32),
+        )
+        return new_state, (y_diag + y_off).astype(x.dtype)
+
+    state0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), dtype=jnp.float32)
+    )
+    final_state, ys = jax.lax.scan(chunk_body, state0, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s], final_state
+
+
+def apply_ssm_block(
+    params: Params,
+    u: jax.Array,  # (B, S, d_model)
+    cfg,
+    cache: SSMCache | None = None,
+) -> tuple[jax.Array, SSMCache | None]:
+    """Full Mamba-2 mixer: proj → conv → SSD → gate → norm → out."""
+    bsz, s, _ = u.shape
+    di, n, h, p = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    z = u @ params["in_z"]
+    xbc = jnp.concatenate(
+        [u @ params["in_x"], u @ params["in_b"], u @ params["in_c"]], axis=-1
+    )
+    conv_init = cache.conv if cache is not None else None
+    xbc, conv_tail = _causal_depthwise_conv(xbc, params["conv_w"], conv_init)
+    xbc = jax.nn.silu(xbc)
+    x_in = xbc[..., :di].reshape(bsz, s, h, p)
+    b_proj = xbc[..., di : di + n]
+    c_proj = xbc[..., di + n :]
+    dt = jax.nn.softplus(
+        (u @ params["in_dt"]).astype(jnp.float32) + params["dt_bias"]
+    )
+    dt = jnp.clip(dt, 1e-4, 10.0)
+    a = -jnp.exp(params["a_log"])
+
+    init_state = cache.state if cache is not None else None
+    if cache is not None and s == 1:
+        # Decode: single-step recurrence (no chunking).
+        state = cache.state.astype(jnp.float32)  # (B, H, P, N)
+        adt = jnp.exp(a[None, :] * dt[:, 0, :])  # (B, H)
+        upd = jnp.einsum(
+            "bn,bh,bhp->bhpn",
+            b_proj[:, 0].astype(jnp.float32),
+            dt[:, 0],
+            x_in[:, 0].astype(jnp.float32),
+        )
+        state = state * adt[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, c_proj[:, 0].astype(jnp.float32))
+        y = y[:, None]  # (B, 1, H, P)
+        new_cache = SSMCache(state=state.astype(cache.state.dtype), conv=conv_tail)
+    else:
+        y, final_state = ssd_chunked(
+            x_in, dt, a, b_proj, c_proj, cfg.ssm_chunk, init_state
+        )
+        new_cache = (
+            SSMCache(state=final_state.astype(u.dtype), conv=conv_tail)
+            if cache is not None
+            else None
+        )
+
+    y = y + params["d_skip"][None, None, :, None] * x_in.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["out_norm"])
+    return y @ params["out_proj"], new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> SSMCache:
+    conv_ch = cfg.d_inner + 2 * cfg.d_state
+    return SSMCache(
+        state=jnp.zeros(
+            (batch, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.d_state), dtype=dtype
+        ),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_ch), dtype=dtype),
+    )

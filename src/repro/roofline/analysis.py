@@ -1,0 +1,174 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips × HBM_bw)
+    collective term = coll_bytes  / (chips × link_bw)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; collective bytes are
+parsed out of the optimized HLO text (operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective opcode over the optimized module.
+
+    HLO lines look like ``%x = bf16[16,512]{1,0} all-reduce(bf16[16,512]{1,0}
+    %add), replica_groups=...``; we take the shapes appearing *after* the
+    opcode's '(' (the operands).  If operand types are not inlined, fall back
+    to the result shape(s) on the line.
+    """
+    totals = {op: 0 for op in _COLLECTIVES}
+    counts = {op: 0 for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in _COLLECTIVES:
+            marker = f" {op}("
+            idx = stripped.find(marker)
+            if idx < 0 or stripped.startswith("//"):
+                continue
+            if f"{op}-start" in stripped and f"= {op}-start" not in stripped:
+                pass
+            operand_part = stripped[idx + len(marker):]
+            operand_shapes = _SHAPE_RE.findall(operand_part.split(")")[0])
+            if not operand_shapes:
+                operand_shapes = _SHAPE_RE.findall(stripped[:idx])
+            totals[op] += sum(_shape_bytes(d, s) for d, s in operand_shapes)
+            counts[op] += 1
+            break
+    totals["ops"] = sum(counts.values())
+    totals["per_op_counts"] = counts  # type: ignore[assignment]
+    return totals
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per device (SPMD module), trip-count corrected
+    hlo_bytes: float  # per device
+    coll_bytes: float  # per device
+    model_flops: float  # 6·N_active·D analytic, per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU upper bound: useful-compute time / bound time."""
+        ideal = self.model_flops / PEAK_FLOPS  # per-device ideal step time
+        return ideal / self.bound_time_s if self.bound_time_s else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for_cell(cfg, cell, n_active: int | None = None) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference fwd), D = tokens."""
+    n = n_active if n_active is not None else cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch
+
+
+def roofline_from_artifacts(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    parsed: dict,  # per-device totals from repro.roofline.hlo_cost.analyze
+    model_flops_global: float,
+) -> RooflineTerms:
+    flops = float(parsed.get("flops", 0.0))
+    byts = float(parsed.get("hbm_bytes", 0.0))
+    cbytes = float(parsed.get("coll_bytes", 0.0))
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        coll_bytes=cbytes,
+        model_flops=model_flops_global / chips,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cbytes / ICI_BW,
+    )

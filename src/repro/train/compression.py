@@ -1,0 +1,49 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+In the shard_map data-parallel path the gradient all-reduce is explicit, so
+we can compress it: cast fp32 grads to bf16 before the ``psum`` and carry the
+quantization residual into the next step (error feedback keeps the scheme
+unbiased over time — Karimireddy et al., "Error Feedback Fixes SignSGD").
+
+Halves DP gradient-reduction bytes; composes with ODB (which changes batch
+geometry, not the reduction).  Exposed as a config flag on the shard_map
+trainer; the pure-pjit path keeps XLA's fused reductions.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress_decompress(
+    grads: Any, error: Any, *, dtype=jnp.bfloat16
+) -> tuple[Any, Any]:
+    """Returns (compressed-as-fp32 grads to reduce, new error residuals)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        gq = g32.astype(dtype)
+        new_e = g32 - gq.astype(jnp.float32)
+        return gq, new_e
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        tdef.unflatten([p[0] for p in pairs]),
+        tdef.unflatten([p[1] for p in pairs]),
+    )
+
+
+def psum_compressed(grads: Any, error: Any, axis_name: str):
+    """Compress → psum(bf16) → decompress; returns (reduced_fp32, new_error)."""
+    gq, new_e = compress_decompress(grads, error)
+    reduced = jax.lax.psum(gq, axis_name)
+    return jax.tree.map(lambda g: g.astype(jnp.float32), reduced), new_e

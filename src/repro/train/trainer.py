@@ -1,0 +1,231 @@
+"""ODB-integrated trainer (paper §2.4 metadata contract + Eq. 2 scaling).
+
+Two execution paths:
+
+  * ``Trainer`` — the deployment path: consumes step-aligned per-rank
+    ``PaddedBatch``es from :class:`repro.data.loader.OnlineDynamicLoader`,
+    unifies them into one global SPMD batch, and drives the jitted
+    ``train_step`` (launch/steps.py).  The global masked per-token mean that
+    the step computes is exactly the token-level scaled objective: IDLE
+    ranks contribute zero tokens and are annihilated (Eq. 2 with t_r = 0).
+    Fault tolerance: periodic atomic checkpoints + resume-from-latest.
+
+  * ``dp_shardmap_step`` — the paper-literal path: per-rank mean losses
+    prescaled by ``W·w_r`` and mean-reduced over an explicit ``psum``,
+    with optional bf16 gradient compression + error feedback.  This is the
+    vehicle for the Eq. 2 bit-exactness tests and the loss-scaling-mode
+    benchmark (Table 18).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.buckets import PaddedBatch
+from repro.core.loss_scaling import prescale_factor
+from repro.data.loader import OnlineDynamicLoader
+from repro.models.model import LM, shift_labels
+from repro.train import checkpoint as ckpt
+from repro.train.compression import init_error_state, psum_compressed
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+def unify_step_shapes(batches: list[PaddedBatch]) -> list[PaddedBatch]:
+    """Re-pad all ranks' batches to the step-max bucket shape (SPMD needs one
+    global shape; bucket grids are shared so the max is itself a bucket)."""
+    n = max(b.tokens.shape[0] for b in batches)
+    l = max(b.tokens.shape[1] for b in batches)
+    out = []
+    for b in batches:
+        if b.tokens.shape == (n, l):
+            out.append(b)
+            continue
+        tokens = np.zeros((n, l), dtype=b.tokens.dtype)
+        mask = np.zeros((n, l), dtype=b.loss_mask.dtype)
+        lengths = np.zeros((n,), dtype=b.lengths.dtype)
+        sn, sl = b.tokens.shape
+        tokens[:sn, :sl] = b.tokens
+        mask[:sn, :sl] = b.loss_mask
+        lengths[:sn] = b.lengths
+        out.append(
+            PaddedBatch(
+                tokens=tokens, loss_mask=mask, lengths=lengths,
+                real_samples=b.real_samples, real_tokens=b.real_tokens,
+            )
+        )
+    return out
+
+
+def global_batch_arrays(batches: list[PaddedBatch]) -> dict[str, np.ndarray]:
+    """Stack per-rank batches into the global (W·n, len) training batch."""
+    batches = unify_step_shapes(batches)
+    tokens = np.concatenate([b.tokens for b in batches], axis=0)
+    mask = np.concatenate([b.loss_mask for b in batches], axis=0)
+    return {"tokens": tokens, "loss_mask": mask}
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    max_steps: int | None = None
+
+
+class Trainer:
+    """End-to-end ODB training driver (single-process; mesh-agnostic)."""
+
+    def __init__(
+        self,
+        model: LM,
+        loader: OnlineDynamicLoader,
+        opt_cfg: OptimizerConfig | None = None,
+        cfg: TrainerConfig | None = None,
+        mesh=None,
+    ):
+        self.model = model
+        self.loader = loader
+        self.opt_cfg = opt_cfg or OptimizerConfig()
+        self.cfg = cfg or TrainerConfig()
+        self.mesh = mesh
+        self._train_step = None
+        self.history: list[dict] = []
+
+    def _build_step(self):
+        opt_cfg = self.opt_cfg
+
+        def step(state, batch):
+            def loss_fn(params):
+                loss_sum, tokens = self.model.loss_sums(params, batch)
+                return loss_sum / jnp.maximum(tokens, 1.0), tokens
+
+            (loss, tokens), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"]
+            )
+            params, opt, om = adamw_update(state["params"], grads, state["opt"], opt_cfg)
+            return {"params": params, "opt": opt}, {
+                "loss": loss, "tokens": tokens, **om
+            }
+
+        self._train_step = jax.jit(step, donate_argnums=(0,))
+
+    def init_state(self, rng) -> dict:
+        params = self.model.init(rng)
+        return {"params": params, "opt": init_opt_state(params, self.opt_cfg)}
+
+    def restore_or_init(self, rng) -> tuple[dict, int]:
+        if self.cfg.checkpoint_dir and ckpt.latest_step(self.cfg.checkpoint_dir) is not None:
+            like = jax.eval_shape(self.init_state, rng)
+            state, step = ckpt.restore_checkpoint(self.cfg.checkpoint_dir, like)
+            return state, step
+        return self.init_state(rng), 0
+
+    def train_epoch(self, state: dict, epoch: int = 0, start_step: int = 0):
+        if self._train_step is None:
+            self._build_step()
+        step_idx = start_step
+        t0 = time.perf_counter()
+        emitted = 0
+        for loader_step in self.loader.epoch(epoch):
+            batch_np = global_batch_arrays(loader_step.batches)
+            tokens = jnp.asarray(batch_np["tokens"])
+            labels, mask = shift_labels(tokens, jnp.asarray(batch_np["loss_mask"]))
+            batch = {"tokens": tokens, "labels": labels, "loss_mask": mask}
+            state, metrics = self._train_step(state, batch)
+            step_idx += 1
+            emitted += loader_step.metadata.emitted_samples
+            if step_idx % self.cfg.log_every == 0:
+                dt = time.perf_counter() - t0
+                rec = {
+                    "step": step_idx,
+                    "loss": float(metrics["loss"]),
+                    "tokens": float(metrics["tokens"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "emitted_samples": emitted,
+                    "sam_per_s": emitted / dt if dt > 0 else 0.0,
+                    "padding": loader_step.metadata.padding_fraction,
+                }
+                self.history.append(rec)
+            if (
+                self.cfg.checkpoint_dir
+                and step_idx % self.cfg.checkpoint_every == 0
+            ):
+                ckpt.save_checkpoint(
+                    self.cfg.checkpoint_dir, step_idx, state,
+                    keep=self.cfg.keep_checkpoints,
+                )
+            if self.cfg.max_steps and step_idx >= self.cfg.max_steps:
+                break
+        return state, step_idx
+
+
+# -----------------------------------------------------------------------------
+# Paper-literal shard_map DP step (Eq. 2 prescaling + optional compression)
+# -----------------------------------------------------------------------------
+
+
+def dp_shardmap_step(
+    model: LM,
+    mesh,
+    opt_cfg: OptimizerConfig,
+    *,
+    loss_mode: str = "exact_token",
+    compress_grads: bool = False,
+):
+    """Per-rank DDP-style step over the ``data`` axis of ``mesh``.
+
+    Each data shard computes its local mean loss L̄_r, prescales it by
+    ``W · w_r`` (Eq. 2), and the psum-mean over shards reproduces the global
+    objective; gradients reduce via psum (optionally bf16-compressed with
+    error feedback).
+    """
+    world = mesh.shape["data"]
+
+    def local_loss(params, batch):
+        loss_sum, tokens = model.loss_sums(params, batch)
+        samples = jnp.sum(jnp.max(batch["loss_mask"], axis=1))
+        mean_local = loss_sum / jnp.maximum(tokens, 1.0)
+        t_tok = jax.lax.psum(tokens, "data")
+        n_tot = jax.lax.psum(samples, "data")
+        factor = prescale_factor(
+            tokens, jnp.maximum(t_tok, 1.0), world, loss_mode,
+            local_samples=samples, global_samples=jnp.maximum(n_tot, 1.0),
+        )
+        scaled = mean_local * factor
+        # DDP post-averaging: mean over ranks == psum / W
+        return jax.lax.psum(scaled, "data") / world, tokens
+
+    def step(state, batch, err):
+        def lf(params):
+            return local_loss(params, batch)
+
+        (loss, tokens), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        # Local grads hold only this shard's term ∂(scaled_r/W)/∂θ; the DDP
+        # AllReduce is the explicit psum below (bf16-compressed if enabled).
+        if compress_grads:
+            grads, err = psum_compressed(grads, err, "data")
+        else:
+            grads = jax.lax.psum(grads, "data")
+        params, opt, om = adamw_update(state["params"], grads, state["opt"], opt_cfg)
+        return {"params": params, "opt": opt}, {"loss": loss, "tokens": tokens, **om}, err
+
+    wrapped = jax.shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(
+            P(),  # state replicated across data (DDP semantics)
+            {"tokens": P("data", None), "labels": P("data", None), "loss_mask": P("data", None)},
+            P(),
+        ),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(wrapped, donate_argnums=(0,)), init_error_state

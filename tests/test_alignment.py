@@ -1,0 +1,121 @@
+"""Max-Based Bidirectional Group Alignment (Alg. 1, Eq. 3) — tests."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (
+    Group,
+    RankAlignmentState,
+    Sample,
+    align_all,
+    align_rank,
+    alignment_target,
+    greedy_group,
+    overflow_downward,
+    split_upward,
+)
+
+
+def groups_of(sizes, start=0):
+    out = []
+    vid = start
+    for n in sizes:
+        samples = tuple(
+            Sample(view_id=vid + i, identity=vid + i, length=64) for i in range(n)
+        )
+        out.append(Group(samples=samples))
+        vid += n
+    return out, vid
+
+
+def state(sizes, capacity=1 << 30, start=0):
+    gs, nxt = groups_of(sizes, start)
+    return (
+        RankAlignmentState(
+            groups=tuple(gs), capacity=capacity, buffered=sum(sizes)
+        ),
+        nxt,
+    )
+
+
+class TestEq3Target:
+    def test_max_based(self):
+        s1, n = state([4, 4])  # G=2
+        s2, _ = state([2] * 5, start=n)  # G=5
+        assert alignment_target([s1, s2]) == 5
+
+    def test_clipped_by_sample_minimum(self):
+        s1, n = state([1, 1, 1])  # 3 samples, 3 groups
+        s2, _ = state([10] * 8, start=n)  # G=8
+        # S_min+ = 3 clips the target
+        assert alignment_target([s1, s2]) == 3
+
+    def test_clipped_by_capacity(self):
+        s1, n = state([2] * 6, capacity=4)
+        s2, _ = state([2] * 8, start=n)
+        assert alignment_target([s1, s2]) == 4
+
+    def test_zero_capacity_excluded(self):
+        """A zero-capacity rank must not collapse the target (App. A):
+        C_min+ is the minimum over *positive* capacities only."""
+        s1, n = state([2] * 6, capacity=0)
+        s2, _ = state([2] * 8, start=n, capacity=8)
+        assert alignment_target([s1, s2]) == 8  # not 1 (rank 1 excluded)
+
+    def test_empty_ranks_ignored(self):
+        s1 = RankAlignmentState(groups=(), capacity=10, buffered=0)
+        s2, _ = state([3, 3])
+        assert alignment_target([s1, s2]) == 2
+
+    def test_no_active(self):
+        s1 = RankAlignmentState(groups=(), capacity=10, buffered=0)
+        assert alignment_target([s1]) == 0
+
+    def test_floor_one(self):
+        s1, _ = state([5])
+        assert alignment_target([s1]) == 1
+
+
+class TestSplitOverflow:
+    def test_split_extracts_singletons_from_reverse(self):
+        gs, _ = groups_of([3, 2])
+        out, splits = split_upward(list(gs), 4)
+        assert len(out) == 4 and splits == 2
+        # reverse scan: first split takes from the last group (2->1), the
+        # second from the first group (3->2)
+        assert sorted(g.size for g in out) == [1, 1, 1, 2]
+
+    def test_overflow_keeps_largest(self):
+        gs, _ = groups_of([5, 1, 3, 2])
+        kept, extras = overflow_downward(list(gs), 2)
+        assert [g.size for g in kept] == [5, 3]
+        assert len(extras) == 3  # 1 + 2 recirculated
+
+    @given(
+        st.lists(st.integers(1, 8), min_size=1, max_size=20),
+        st.integers(1, 30),
+    )
+    @settings(max_examples=80, deadline=None)
+    def test_alignment_conserves_samples(self, sizes, target):
+        st_, _ = state(sizes)
+        res = align_rank(st_, target)
+        out_ids = sorted(
+            [s.view_id for g in res.groups for s in g.samples]
+            + [s.view_id for s in res.recirculated]
+        )
+        in_ids = sorted(s.view_id for g in st_.groups for s in g.samples)
+        assert out_ids == in_ids
+
+    @given(st.lists(st.lists(st.integers(1, 6), min_size=1, max_size=12), min_size=1, max_size=6))
+    @settings(max_examples=60, deadline=None)
+    def test_all_active_ranks_reach_target(self, per_rank_sizes):
+        states = []
+        nxt = 0
+        for sizes in per_rank_sizes:
+            s, nxt = state(sizes, start=nxt)
+            states.append(s)
+        target, results = align_all(states)
+        for s, r in zip(states, results):
+            if s.group_count > 0:
+                # Eq. 3 guarantees splits suffice: target <= S_min+ <= S_r
+                assert len(r.groups) == target

@@ -1,0 +1,97 @@
+"""TPU shape bucketing + packed emission (hardware adaptation layer)."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    BucketSpec,
+    Group,
+    PackedBucketSpec,
+    Sample,
+    greedy_group,
+    idle_batch,
+    pack_group,
+    pad_group,
+)
+from repro.core.buckets import bucket_padding_stats
+
+
+def group_of(lengths, start=0):
+    return Group(
+        samples=tuple(
+            Sample(view_id=start + i, identity=start + i, length=l)
+            for i, l in enumerate(lengths)
+        )
+    )
+
+
+class TestBucketSpec:
+    def test_grids_aligned(self):
+        spec = BucketSpec(min_len=128, max_len=8192, align=128)
+        assert all(g % 128 == 0 for g in spec.length_grid())
+        assert spec.length_grid()[0] == 128 and spec.length_grid()[-1] == 8192
+
+    @given(st.integers(1, 8192), st.integers(1, 512))
+    @settings(max_examples=80, deadline=None)
+    def test_bucket_dominates(self, length, count):
+        spec = BucketSpec(min_len=128, max_len=8192, max_count=512)
+        nb, lb = spec.bucket_shape(count, length)
+        assert nb >= count and lb >= length
+
+    @given(st.integers(128, 8192))
+    @settings(max_examples=60, deadline=None)
+    def test_length_overhead_bounded(self, length):
+        spec = BucketSpec(min_len=128, max_len=8192, use_midpoints=True)
+        lb = spec.bucket_length(length)
+        assert lb / length <= 2.0 + 1e-9  # geometric grid bound
+        if length >= 256:
+            assert lb / length <= 1.6  # with 1.5x midpoints
+
+    def test_bounded_compile_count(self):
+        spec = BucketSpec(min_len=128, max_len=32768, max_count=4096)
+        assert spec.num_shapes() < 400
+
+
+class TestPadGroup:
+    def test_contents_and_mask(self):
+        g = group_of([5, 9])
+        spec = BucketSpec(min_len=8, max_len=64, align=8, max_count=8)
+        pb = pad_group(g, spec)
+        assert pb.shape == (2, 16)
+        assert pb.real_samples == 2 and pb.real_tokens == 14
+        np.testing.assert_array_equal(pb.loss_mask.sum(axis=1), [5, 9])
+        assert pb.tokens[0, 5:].sum() == 0  # padded region
+
+    def test_idle_batch_zero(self):
+        ib = idle_batch((4, 16))
+        assert ib.real_tokens == 0 and ib.loss_mask.sum() == 0
+
+
+class TestPackedEmission:
+    def test_segments_and_positions(self):
+        g = group_of([5, 3, 7])
+        spec = PackedBucketSpec(min_tokens=16, max_tokens=64, align=8)
+        pk = pack_group(g, spec)
+        seg = pk.segment_ids[0]
+        assert list(seg[:5]) == [1] * 5
+        assert list(seg[5:8]) == [2] * 3
+        assert list(seg[8:15]) == [3] * 7
+        assert seg[15:].sum() == 0  # padding segment 0
+        np.testing.assert_array_equal(pk.positions[0, 5:8], [0, 1, 2])
+        assert pk.real_tokens == 15
+
+    def test_packed_padding_below_padded(self):
+        """Packed emission strictly dominates per-sample padding on ragged groups."""
+        lengths = [37, 101, 64, 512, 48, 222, 90, 33]
+        groups = greedy_group(
+            [Sample(i, i, l) for i, l in enumerate(lengths)], 1024
+        )
+        pad_spec = BucketSpec(min_len=128, max_len=1024, max_count=64)
+        packed_spec = PackedBucketSpec(min_tokens=128, max_tokens=2048)
+        padded = bucket_padding_stats(groups, pad_spec)["bucket_padding_fraction"]
+        packed_frac = 1 - sum(g.real_tokens for g in groups) / sum(
+            pack_group(g, packed_spec).tokens.shape[1] for g in groups
+        )
+        assert packed_frac <= padded + 1e-9

@@ -1,0 +1,173 @@
+"""Data substrate: sampler, pipeline, datasets, baselines, oracles."""
+
+import math
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import Group
+from repro.data import (
+    DATASET_CLONES,
+    SYNTHETIC_DISTRIBUTIONS,
+    LengthCache,
+    PipelinePolicy,
+    SamplerSpec,
+    StaleCacheError,
+    bmt_schedule,
+    get_dataset,
+    gmt_schedule,
+    hfg_schedule,
+    length_cv,
+    packing_schedule,
+    run_pipeline,
+    shard_views,
+    sorted_schedule,
+    standard_schedule,
+)
+from repro.data.pipeline import RawRecord
+
+
+class TestSampler:
+    @given(st.integers(1, 500), st.integers(1, 16))
+    @settings(max_examples=60, deadline=None)
+    def test_multiset_padding(self, n, w):
+        spec = SamplerSpec(dataset_size=n, world_size=w, seed=3)
+        views = shard_views(spec, 0, [17] * n)
+        m = w * math.ceil(n / w)
+        assert sum(len(v) for v in views) == m
+        assert spec.padding_views == m - n
+        identities = [s.identity for v in views for s in v]
+        assert set(identities) == set(range(n))  # identity coverage
+        # padding views duplicate at most P identities
+        from collections import Counter
+        dup = sum(c - 1 for c in Counter(identities).values())
+        assert dup == m - n
+
+    def test_equal_quotas(self):
+        spec = SamplerSpec(dataset_size=103, world_size=8)
+        views = shard_views(spec, 0, [5] * 103)
+        assert {len(v) for v in views} == {13}
+
+
+class TestPipeline:
+    def test_deterministic(self):
+        rec = RawRecord(identity=5, chars=4000, turns=3)
+        pol = PipelinePolicy()
+        assert run_pipeline(rec, pol, 0) == run_pipeline(rec, pol, 0)
+
+    def test_policy_changes_lengths(self):
+        rec = RawRecord(identity=5, chars=4000, turns=3)
+        a = run_pipeline(rec, PipelinePolicy(), 0)
+        b = run_pipeline(rec, PipelinePolicy(chars_per_token=2.9), 0)
+        assert a != b
+
+    def test_augmentation_varies_by_epoch(self):
+        rec = RawRecord(identity=9, chars=9000)
+        pol = PipelinePolicy(augmentation_strength=0.3)
+        lengths = {run_pipeline(rec, pol, e) for e in range(6)}
+        assert len(lengths) > 1  # epoch-dependent realized lengths
+
+    def test_visual_expansion(self):
+        text = RawRecord(identity=1, chars=300)
+        multi = RawRecord(identity=1, chars=300, image_pixels=1_000_000)
+        pol = PipelinePolicy()
+        assert run_pipeline(multi, pol) > run_pipeline(text, pol) + 500
+
+
+class TestDatasets:
+    @pytest.mark.parametrize("name,target_cv", [
+        ("ultrachat", 0.48), ("llava", 0.29), ("sharegpt4o", 1.00), ("mmmix", 0.80),
+    ])
+    def test_clone_cv(self, name, target_cv):
+        ds = get_dataset(name, scale=0.03)
+        cv = length_cv(ds.lengths())
+        assert abs(cv - target_cv) < 0.15, (name, cv)
+
+    def test_synthetic_families(self):
+        assert set(SYNTHETIC_DISTRIBUTIONS) == {
+            "uniform_narrow", "uniform_wide", "longtail",
+            "bimodal", "all_long", "all_short",
+        }
+        for name, ds in SYNTHETIC_DISTRIBUTIONS.items():
+            lengths = ds.lengths()
+            assert len(lengths) == 1000
+            assert all(l >= 1 for l in lengths)
+
+
+def _coverage(steps, n):
+    ids = {
+        s.identity for step in steps for g in step if g is not None for s in g.samples
+    }
+    return len(ids) / n
+
+
+class TestBaselines:
+    def test_standard_coverage_and_shape(self):
+        lengths = get_dataset("longtail").lengths()
+        steps = standard_schedule(lengths, 4, 8)
+        assert _coverage(steps, len(lengths)) == 1.0
+        sizes = {g.size for step in steps for g in step if g is not None}
+        assert max(sizes) == 8
+
+    def test_sorted_reduces_padding(self):
+        from repro.core import padding_stats
+        lengths = get_dataset("longtail").lengths()
+        std = [g for s in standard_schedule(lengths, 4, 8) for g in s if g]
+        srt = [g for s in sorted_schedule(lengths, 4, 8, buffer_size=256) for g in s if g]
+        assert (
+            padding_stats(srt)["padding_fraction"]
+            < padding_stats(std)["padding_fraction"]
+        )
+
+    def test_packing_fills_windows(self):
+        lengths = get_dataset("uniform_narrow").lengths()
+        steps = packing_schedule(lengths, 2, 4096)
+        for step in steps:
+            for g in step:
+                if g is not None and g.size > 1:
+                    assert g.real_tokens <= 4096
+
+
+class TestOracles:
+    def setup_method(self):
+        self.ds = get_dataset("sharegpt4o", scale=0.01)
+        self.cache = LengthCache.build(self.ds)
+
+    def test_cache_invalidation(self):
+        self.cache.validate(self.ds, self.ds.policy)  # ok
+        with pytest.raises(StaleCacheError):
+            self.cache.validate(
+                self.ds, PipelinePolicy(template="llama3", cutoff_len=16384)
+            )
+
+    def test_gmt_feasibility(self):
+        budget = 8192
+        steps = gmt_schedule(self.cache, 4, budget)
+        for step in steps:
+            for g in step:
+                if g is not None and g.size > 1:
+                    assert g.max_length * g.size <= budget  # padded-area rule
+        assert _coverage(steps, self.ds.size) == 1.0
+
+    def test_bmt_feasibility_and_coverage(self):
+        steps = bmt_schedule(self.cache, 4, 8192, bucket_samples=256)
+        for step in steps:
+            for g in step:
+                if g is not None and g.size > 1:
+                    assert g.max_length * g.size <= 8192
+        assert _coverage(steps, self.ds.size) == 1.0
+
+    def test_equal_rank_step_counts(self):
+        for sched in (
+            gmt_schedule(self.cache, 4, 8192),
+            bmt_schedule(self.cache, 4, 8192),
+            hfg_schedule(self.cache, 4, 8),
+        ):
+            for step in sched:
+                assert len(step) == 4  # wrap-around padding guarantees W cols
+
+    def test_hfg_fixed_batch(self):
+        steps = hfg_schedule(self.cache, 4, 8)
+        sizes = {g.size for step in steps for g in step if g is not None}
+        assert sizes == {8} or sizes == {8, self.ds.size % 8}

@@ -1,0 +1,110 @@
+"""Grouping (§2.2, Eq. 1, App. D) — unit + property tests."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import Group, Sample, greedy_group, padding_stats, target_group_size
+
+
+def make_samples(lengths):
+    return [Sample(view_id=i, identity=i, length=l) for i, l in enumerate(lengths)]
+
+
+class TestEq1:
+    def test_basic(self):
+        assert target_group_size(100, 1000) == 10
+        assert target_group_size(1000, 1000) == 1
+        assert target_group_size(1500, 1000) == 1  # clamped to 1
+        assert target_group_size(333, 1000) == 3
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            target_group_size(0, 1000)
+        with pytest.raises(ValueError):
+            target_group_size(10, 0)
+
+    @given(st.integers(1, 10_000), st.integers(1, 100_000))
+    @settings(max_examples=100, deadline=None)
+    def test_budget_bound(self, l, l_max):
+        b = target_group_size(l, l_max)
+        assert b >= 1
+        # B(l)·l ≈ L_max: the next size would exceed the budget (unless clamped)
+        if b > 1:
+            assert b * l <= l_max
+        assert (b + 1) * l > l_max or b == 1 and l > l_max or (b + 1) * l > l_max
+
+
+class TestAppDWorkedExample:
+    def test_exact_trace(self):
+        """App. D: L_max=1000, {100,200,500,800} -> [800],[500],[100,200]."""
+        groups = greedy_group(make_samples([100, 200, 500, 800]), 1000)
+        assert [sorted(g.lengths()) for g in groups] == [[800], [500], [100, 200]]
+
+    def test_padded_token_costs(self):
+        groups = greedy_group(make_samples([100, 200, 500, 800]), 1000)
+        assert [g.padded_tokens for g in groups] == [800, 500, 400]
+
+
+class TestGreedyGroupProperties:
+    @given(
+        st.lists(st.integers(1, 4096), min_size=1, max_size=300),
+        st.integers(64, 16384),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_conservation(self, lengths, l_max):
+        samples = make_samples(lengths)
+        groups = greedy_group(samples, l_max)
+        out_ids = sorted(s.view_id for g in groups for s in g.samples)
+        assert out_ids == sorted(s.view_id for s in samples)
+
+    @given(
+        st.lists(st.integers(1, 4096), min_size=1, max_size=300),
+        st.integers(64, 16384),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_group_token_budget(self, lengths, l_max):
+        """Non-singleton groups never exceed the padded-area budget beyond
+        one threshold step (greedy invariant: size was <= B(shortest))."""
+        groups = greedy_group(make_samples(lengths), l_max)
+        for g in groups:
+            shortest = min(g.lengths())
+            assert g.size <= max(target_group_size(shortest, l_max), 1)
+
+    @given(st.lists(st.integers(1, 2048), min_size=2, max_size=200))
+    @settings(max_examples=40, deadline=None)
+    def test_within_group_homogeneity(self, lengths):
+        """Adjacent grouping: every group spans a contiguous length range."""
+        l_max = 4096
+        groups = greedy_group(make_samples(lengths), l_max)
+        spans = sorted((min(g.lengths()), max(g.lengths())) for g in groups)
+        for (lo1, hi1), (lo2, hi2) in zip(spans, spans[1:]):
+            assert hi1 <= hi2  # sorted-order grouping never interleaves
+
+    def test_uniform_lengths_converge_to_budget(self):
+        """'With more samples of similar lengths, each group's padded cost
+        approaches L_max' (App. D)."""
+        groups = greedy_group(make_samples([128] * 512), 4096)
+        full = [g for g in groups[1:-1]]  # interior groups
+        for g in full:
+            assert g.padded_tokens == 4096  # 32 x 128 exactly
+
+    def test_padding_stats(self):
+        groups = greedy_group(make_samples([100, 200, 500, 800]), 1000)
+        stats = padding_stats(groups)
+        assert stats["samples"] == 4
+        assert stats["real_tokens"] == 1600
+        assert stats["padded_tokens"] == 1700
+        assert 0 < stats["padding_fraction"] < 0.1
+
+
+class TestGroup:
+    def test_empty_group_rejected(self):
+        with pytest.raises(ValueError):
+            Group(samples=())
+
+    def test_properties(self):
+        g = Group(samples=tuple(make_samples([10, 30])))
+        assert g.size == 2 and g.max_length == 30
+        assert g.real_tokens == 40 and g.padded_tokens == 60
+        assert abs(g.padding_fraction - 1 / 3) < 1e-9

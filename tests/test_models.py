@@ -1,0 +1,211 @@
+"""Per-arch smoke tests (reduced configs) + decode-consistency checks."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import LM, shift_labels
+
+
+def make_batch(cfg, b=2, s=32, seed=1):
+    rng = jax.random.PRNGKey(seed)
+    if cfg.input_embeds:
+        return {
+            "embeds": jax.random.normal(rng, (b, s, cfg.d_model), jnp.float32),
+            "labels": jax.random.randint(rng, (b, s), 0, cfg.vocab_size),
+            "loss_mask": jnp.ones((b, s), jnp.float32),
+        }
+    toks = jax.random.randint(rng, (b, s), 1, cfg.vocab_size)
+    labels, mask = shift_labels(toks, jnp.ones((b, s), jnp.float32))
+    return {"tokens": toks, "labels": labels, "loss_mask": mask}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_smoke_config(arch)
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = make_batch(cfg)
+        logits = model.forward(params, batch)
+        b, s = batch["labels"].shape
+        from repro.models.model import padded_vocab
+        assert logits.shape == (b, s, padded_vocab(cfg.vocab_size))
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_train_step_grad_finite(self, arch):
+        cfg = get_smoke_config(arch)
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = make_batch(cfg)
+
+        def loss_fn(p):
+            ls, tc = model.loss_sums(p, batch)
+            return ls / tc
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert bool(jnp.isfinite(loss))
+        leaves = jax.tree_util.tree_leaves(grads)
+        assert all(bool(jnp.isfinite(g).all()) for g in leaves)
+
+    def test_full_config_matches_spec(self, arch):
+        cfg = get_config(arch)
+        spec = {
+            "chameleon_34b": (48, 8192, 65536),
+            "qwen3_0_6b": (28, 1024, 151936),
+            "olmo_1b": (16, 2048, 50304),
+            "deepseek_7b": (30, 4096, 102400),
+            "yi_34b": (60, 7168, 64000),
+            "deepseek_v3_671b": (61, 7168, 129280),
+            "arctic_480b": (35, 7168, 32000),
+            "jamba_1_5_large": (72, 8192, 65536),
+            "mamba2_130m": (24, 768, 50280),
+            "hubert_xlarge": (48, 1280, 504),
+        }[arch]
+        assert (cfg.n_layers, cfg.d_model, cfg.vocab_size) == spec
+
+
+class TestParamCountsMatchPublished:
+    @pytest.mark.parametrize("arch,total_b,active_b,tol", [
+        ("chameleon_34b", 34.3, None, 0.1),
+        ("yi_34b", 34.4, None, 0.1),
+        ("deepseek_v3_671b", 671.0, 37.5, 0.03),
+        ("arctic_480b", 477.0, 15.6, 0.1),
+        ("jamba_1_5_large", 398.0, 93.3, 0.05),
+        ("deepseek_7b", 6.9, None, 0.1),
+    ])
+    def test_param_count(self, arch, total_b, active_b, tol):
+        cfg = get_config(arch)
+        assert abs(cfg.param_count() / 1e9 - total_b) / total_b < tol
+        if active_b:
+            assert abs(cfg.active_param_count() / 1e9 - active_b) / active_b < tol
+
+
+class TestDecodeConsistency:
+    """prefill+decode must reproduce the full forward (teacher-forced)."""
+
+    @pytest.mark.parametrize("arch", ["qwen3_0_6b", "deepseek_v3_671b", "mamba2_130m", "jamba_1_5_large"])
+    def test_decode_matches_forward(self, arch):
+        # MoE capacity drops are a function of the *batch* composition, so
+        # teacher-forced decode == full-forward only holds dropless: raise
+        # capacity_factor for the consistency check.
+        cfg = dataclasses.replace(get_smoke_config(arch), capacity_factor=64.0)
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        b, s = 2, 16
+        toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 1, cfg.vocab_size)
+        full = model.forward(params, {"tokens": toks})
+
+        split = s // 2
+        _, caches = model.prefill(params, toks[:, :split], max_len=s)
+        logits_steps = []
+        idx = jnp.array(split, jnp.int32)
+        for t in range(split, s):
+            lg, caches = model.decode_step(params, caches, toks[:, t : t + 1], idx)
+            logits_steps.append(lg)
+            idx = idx + 1
+        dec = jnp.concatenate(logits_steps, axis=1)
+        ref = full[:, split:s, : dec.shape[-1]]
+        np.testing.assert_allclose(
+            np.asarray(dec, np.float32), np.asarray(ref, np.float32),
+            atol=2e-3, rtol=2e-3,
+        )
+
+    def test_encoder_has_no_decode_cell(self):
+        from repro.launch.shapes import applicability
+        cfg = get_config("hubert_xlarge")
+        ok, reason = applicability(cfg, "decode_32k")
+        assert not ok and "encoder" in reason
+
+    def test_long_cells_only_subquadratic(self):
+        from repro.launch.shapes import applicability
+        assert applicability(get_config("mamba2_130m"), "long_500k")[0]
+        assert applicability(get_config("jamba_1_5_large"), "long_500k")[0]
+        assert not applicability(get_config("yi_34b"), "long_500k")[0]
+
+
+class TestBlockwiseAttentionEquivalence:
+    def test_block_scan_matches_single_block(self):
+        """q-block scanned attention == one-shot attention (same mask)."""
+        from repro.models.attention import _block_sdpa
+        b, s, kh, g, d = 2, 128, 2, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, s, kh, g, d))
+        k = jax.random.normal(ks[1], (b, s, kh, d))
+        v = jax.random.normal(ks[2], (b, s, kh, d))
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        out_blocked = _block_sdpa(q, k, v, pos, pos, None, None, None, True, 0.25, q_block=32)
+        out_full = _block_sdpa(q, k, v, pos, pos, None, None, None, True, 0.25, q_block=128)
+        np.testing.assert_allclose(
+            np.asarray(out_blocked), np.asarray(out_full), atol=1e-5, rtol=1e-5
+        )
+
+    def test_matches_kernel_reference(self):
+        """XLA path and the Pallas kernel implement the same contract."""
+        from repro.kernels.ref import segment_flash_attention_ref
+        from repro.models.attention import _block_sdpa
+        b, s, kv, g, d = 1, 64, 2, 2, 16
+        h = kv * g
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, s, kv, d))
+        v = jax.random.normal(ks[2], (b, s, kv, d))
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        out = _block_sdpa(
+            q.reshape(b, s, kv, g, d), k, v, pos, pos, None, None, None,
+            True, 1.0 / d**0.5, q_block=32,
+        ).reshape(b, s, h, d)
+        ref = segment_flash_attention_ref(q, k, v, None, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+class TestMoE:
+    def test_ep_dispatch_conserves_routing(self):
+        """Scatter dispatch == dense per-expert masked compute (small case)."""
+        from repro.models.moe import dispatch_compute_combine, router_topk
+        import numpy as onp
+        t, d, e, ff, k = 64, 16, 4, 8, 2
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(ks[0], (t, d))
+        router = jax.random.normal(ks[1], (d, e))
+        w_in = jax.random.normal(ks[2], (e, d, ff)) * 0.2
+        w_gate = jax.random.normal(ks[3], (e, d, ff)) * 0.2
+        w_out = jax.random.normal(ks[4], (e, ff, d)) * 0.2
+        weights, ids = router_topk(x, router, k)
+        y = dispatch_compute_combine(
+            x, weights, ids, w_in, w_gate, w_out,
+            e_start=0, capacity=t * k, act="silu",
+        )
+        # dense oracle
+        y_ref = onp.zeros((t, d), onp.float32)
+        xn, wn, idn = map(onp.asarray, (x, weights, ids))
+        for ti in range(t):
+            for kk in range(k):
+                eidx = int(idn[ti, kk])
+                h = xn[ti] @ onp.asarray(w_in)[eidx]
+                gate = xn[ti] @ onp.asarray(w_gate)[eidx]
+                act = gate / (1 + onp.exp(-gate))
+                y_ref[ti] += wn[ti, kk] * ((act * h) @ onp.asarray(w_out)[eidx])
+        np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-3)
+
+    def test_capacity_drops_tokens(self):
+        from repro.models.moe import dispatch_compute_combine, router_topk
+        t, d, e, ff, k = 64, 16, 2, 8, 2
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        x = jax.random.normal(ks[0], (t, d))
+        router = jax.random.normal(ks[1], (d, e))
+        w = [jax.random.normal(ks[i], (e, d if i < 4 else ff, ff if i < 4 else d)) * 0.2 for i in (2, 3)]
+        w_out = jax.random.normal(ks[4], (e, ff, d)) * 0.2
+        weights, ids = router_topk(x, router, k)
+        y_small = dispatch_compute_combine(
+            x, weights, ids, w[0], w[1], w_out, e_start=0, capacity=8, act="silu"
+        )
+        y_big = dispatch_compute_combine(
+            x, weights, ids, w[0], w[1], w_out, e_start=0, capacity=t * k, act="silu"
+        )
+        # capacity 8 per expert with ~64 assignments must drop -> different
+        assert not np.allclose(np.asarray(y_small), np.asarray(y_big))

@@ -1,0 +1,202 @@
+"""DGAP protocol — Theorems 1–4, Lemmas 1/3/4, App. C.5/C.6/F audits."""
+
+import math
+import random
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    IDLE,
+    OdbConfig,
+    OdbProtocolEngine,
+    Sample,
+    run_epoch,
+)
+from repro.data.datasets import SYNTHETIC_DISTRIBUTIONS
+from repro.data.sampler import SamplerSpec, shard_views
+
+
+def make_views_factory(n, world, lengths=None, seed=0):
+    spec = SamplerSpec(dataset_size=n, world_size=world, seed=seed)
+    if lengths is None:
+        rng = random.Random(seed)
+        lengths = [rng.randint(8, 800) for _ in range(n)]
+
+    def make_views(iteration):
+        return shard_views(spec, iteration, lengths, view_id_base=iteration * 10**7)
+
+    return make_views
+
+
+small_cfg = lambda join, **kw: OdbConfig(
+    l_max=kw.pop("l_max", 1024),
+    buffer_size=kw.pop("buffer_size", 32),
+    prefetch_factor=kw.pop("prefetch_factor", 16),
+    num_workers=kw.pop("num_workers", 2),
+    join_mode=join,
+    **kw,
+)
+
+
+class TestTheorem1JoinMode:
+    """Strict zero-discard: emitted view multiset == sampler multiset M."""
+
+    @given(
+        st.integers(3, 400),  # N
+        st.integers(1, 8),  # W
+        st.integers(4, 64),  # buffer
+        st.booleans(),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_identity_coverage_and_multiset(self, n, world, buffer, small_lmax):
+        cfg = small_cfg(True, buffer_size=buffer, l_max=256 if small_lmax else 4096)
+        audit = run_epoch(make_views_factory(n, world), n, cfg)
+        m = world * math.ceil(n / world)
+        assert audit.emitted_views == m  # full multiset (Thm 1)
+        assert audit.emitted_identities == n  # identity projection covers N
+        assert audit.eta_identity == 0.0
+        assert audit.surplus_emits == m - n  # deterministic padding P
+        assert audit.logical_iterations == 1
+
+    def test_eta_logical_zero_by_construction(self):
+        cfg = small_cfg(True)
+        make_views = make_views_factory(257, 8)
+        engine = OdbProtocolEngine(make_views(0), cfg)
+        engine.run_iteration()
+        # drain-then-signal: outstanding sets empty at termination
+        assert all(r.outstanding == 0 for r in engine.ranks)
+
+
+class TestTheorem2NonJoin:
+    """No-leak + sample-quota closure N <= S_emit <= N + S_max."""
+
+    @given(st.integers(3, 300), st.integers(1, 8), st.integers(4, 48))
+    @settings(max_examples=40, deadline=None)
+    def test_quota_closure(self, n, world, buffer):
+        cfg = small_cfg(False, buffer_size=buffer)
+        steps = []
+        audit = run_epoch(
+            make_views_factory(n, world), n, cfg, on_step=steps.append
+        )
+        assert audit.eta_quota == 0.0
+        s_max = max(
+            sum(g.size for g in step if g is not IDLE) for step in steps
+        )
+        assert n <= audit.emitted_views <= n + s_max
+
+    def test_corollary1_terminal_epoch(self):
+        """Cor. 1: terminal epoch rounds to 1.0000/1.0001-style overshoot."""
+        for name, ds in SYNTHETIC_DISTRIBUTIONS.items():
+            lengths = ds.lengths()
+            cfg = small_cfg(False, buffer_size=64, l_max=2048)
+            audit = run_epoch(
+                make_views_factory(len(lengths), 8, lengths), len(lengths), cfg
+            )
+            assert audit.eta_quota == 0.0, name
+            assert 1.0 <= audit.terminal_epoch < 1.2, (name, audit.terminal_epoch)
+
+
+class TestLemma1NoLeak:
+    @given(st.integers(8, 200), st.integers(2, 6))
+    @settings(max_examples=30, deadline=None)
+    def test_component_conservation_every_round(self, n, world):
+        cfg = small_cfg(True, buffer_size=16)
+        views = make_views_factory(n, world)(0)
+        engine = OdbProtocolEngine(views, cfg)
+        total = sum(len(v) for v in views)
+        while True:
+            rec = engine.run_round()
+            engine.check_no_leak(total)  # raises on violation
+            if all(s == -1 for s in rec.statuses):
+                break
+
+
+class TestTheorem3and4Termination:
+    @given(st.integers(8, 400), st.integers(1, 8), st.booleans())
+    @settings(max_examples=40, deadline=None)
+    def test_round_bound(self, n, world, join):
+        cfg = small_cfg(join, buffer_size=16, prefetch_factor=8)
+        engine = OdbProtocolEngine(make_views_factory(n, world)(0), cfg)
+        result = engine.run_iteration()  # raises BoundedTerminationError if over
+        q = math.ceil(n / world)
+        assert result.rounds <= q + cfg.depth + 64
+
+    def test_lyapunov_monotone_on_emit_rounds(self):
+        cfg = small_cfg(True, buffer_size=16)
+        engine = OdbProtocolEngine(make_views_factory(200, 4)(0), cfg)
+        result = engine.run_iteration()
+        prev = None
+        for rec in result.records:
+            if prev is not None:
+                if rec.emitted_views > 0:
+                    assert rec.potential < prev  # Lemma 2(a): strict decrease
+                else:
+                    assert rec.potential <= prev  # skip rounds don't increase
+            prev = rec.potential
+
+    def test_straggler_liveness(self):
+        """Slow ranks (drain_rate=1) must not deadlock or break alignment."""
+        cfg = small_cfg(True, buffer_size=8, prefetch_factor=4)
+        audit = run_epoch(
+            make_views_factory(120, 4), 120, cfg,
+            drain_rates=[1, None, None, 3],
+        )
+        assert audit.eta_identity == 0.0
+
+
+class TestLemma3UniformGather:
+    def test_single_gather_per_round_all_ranks(self):
+        cfg = small_cfg(True, buffer_size=16, exact_token_scaling=False)
+        engine = OdbProtocolEngine(make_views_factory(100, 4)(0), cfg)
+        result = engine.run_iteration()
+        assert engine.collective.stats.rounds == result.rounds
+
+    def test_second_gather_all_or_none(self):
+        cfg = small_cfg(True, buffer_size=16, exact_token_scaling=True)
+        engine = OdbProtocolEngine(make_views_factory(100, 4)(0), cfg)
+        result = engine.run_iteration()
+        secondary = sum(1 for r in result.records if r.second_gather)
+        assert engine.collective.stats.secondary_rounds == secondary
+
+
+class TestLemma4DiscardEnvelope:
+    @given(st.integers(50, 300), st.integers(2, 8))
+    @settings(max_examples=25, deadline=None)
+    def test_abandoned_bounded_by_wd(self, n, world):
+        cfg = small_cfg(False, buffer_size=16, prefetch_factor=8)
+        engine = OdbProtocolEngine(make_views_factory(n, world)(0), cfg)
+        result = engine.run_iteration()
+        assert result.abandoned_views <= world * cfg.depth
+        for r in engine.ranks:
+            assert r.outstanding <= cfg.depth
+
+
+class TestAppFEmptyRank:
+    """Empty-rank liveness audit (outside the equal-quota premise)."""
+
+    def test_empty_rank_terminates_clean(self):
+        n, world = 90, 6
+        spec = SamplerSpec(dataset_size=n, world_size=world - 1, seed=1)
+        rng = random.Random(0)
+        lengths = [rng.randint(8, 500) for _ in range(n)]
+        views = shard_views(spec, 0, lengths)
+        views.append([])  # rank 5 = exhausted empty rank
+        cfg = small_cfg(True, buffer_size=16)
+        engine = OdbProtocolEngine(views, cfg)
+        result = engine.run_iteration()  # must not deadlock
+        assert result.terminated_by == "join_all_finished"
+        steps = list(engine.aligned_steps())
+        # empty rank emitted zero real batches, others emitted all views
+        assert all(step[world - 1] is IDLE for step in steps)
+        emitted = sum(g.size for step in steps for g in step if g is not IDLE)
+        assert emitted == sum(len(v) for v in views)
+
+    def test_idle_positions_step_aligned(self):
+        views = make_views_factory(40, 3)(0)
+        views[1] = views[1][:2]  # unequal quotas
+        engine = OdbProtocolEngine(views, small_cfg(True, buffer_size=8))
+        engine.run_iteration()
+        lengths = {len(r.out_queue) for r in engine.ranks}
+        assert len(lengths) == 1  # queues stay positionally aligned

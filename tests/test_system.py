@@ -1,0 +1,58 @@
+"""End-to-end behaviour tests for the full ODB system."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import BucketSpec, OdbConfig
+from repro.data import OnlineDynamicLoader, get_dataset
+from repro.models import LM
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_full_system_train_and_serve():
+    """Dataset -> online pipeline -> DGAP protocol -> bucketed batches ->
+    jitted train steps -> decode, with guarantees audited along the way."""
+    cfg = dataclasses.replace(get_smoke_config("qwen3_0_6b"), vocab_size=512)
+    model = LM(cfg)
+    loader = OnlineDynamicLoader(
+        get_dataset("bimodal"),
+        world_size=4,
+        config=OdbConfig(l_max=1024, buffer_size=64, prefetch_factor=16, num_workers=4),
+        bucket_spec=BucketSpec(min_len=64, max_len=4096, align=64, max_count=128),
+        vocab_size=cfg.vocab_size,
+    )
+    trainer = Trainer(
+        model, loader, OptimizerConfig(lr=1e-3, total_steps=50),
+        TrainerConfig(log_every=1, max_steps=8),
+    )
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    state, steps = trainer.train_epoch(state)
+    assert steps >= 4
+    assert all(jnp.isfinite(h["loss"]).item() for h in trainer.history)
+
+    # the protocol guarantees held during training (Theorem 1)
+    audit = loader.last_audit
+    assert audit.eta_identity == 0.0 and audit.eta_quota == 0.0
+
+    # padding stayed far below fixed-batch levels on bimodal data
+    assert loader.accounting.padding_fraction < 0.25
+
+    # the trained params serve: prefill + decode produce finite logits
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 1, cfg.vocab_size)
+    logits, caches = model.prefill(state["params"], toks, max_len=16)
+    assert bool(jnp.isfinite(logits).all())
+    lg, caches = model.decode_step(
+        state["params"], caches, toks[:, -1:], jnp.array(12, jnp.int32)
+    )
+    assert lg.shape[0] == 2 and bool(jnp.isfinite(lg).all())
+
+
+def test_benchmark_harness_importable():
+    """benchmarks.run exposes a main() per the harness contract."""
+    import benchmarks.run as run
+    assert callable(run.main)
