@@ -1,0 +1,26 @@
+# Developer entry points. `pythonpath = src` in pyproject.toml covers pytest;
+# benchmark/launch modules still need src (and the repo root for the
+# `benchmarks` namespace package) on PYTHONPATH.
+PY ?= python
+PP := PYTHONPATH=src:.
+
+.PHONY: test test-fast bench-smoke bench lint train-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:  ## skip the slow jax end-to-end modules
+	$(PY) -m pytest -x -q --ignore=tests/test_system.py --ignore=tests/test_train.py --ignore=tests/test_models.py --ignore=tests/test_kernels.py
+
+bench-smoke:  ## streaming data-path benchmark only (CPU, seconds)
+	$(PP) $(PY) -m benchmarks.run --streaming
+
+bench:  ## full benchmark harness (all paper tables)
+	$(PP) $(PY) -m benchmarks.run
+
+lint:  ## no third-party linter in the container: syntax-check everything
+	$(PY) -m compileall -q src tests benchmarks examples
+
+train-smoke:
+	$(PP) $(PY) -m repro.launch.train --arch qwen3_0_6b --smoke --steps 8 \
+	  --world 2 --l-max 1024 --buffer 32 --prefetch 8 --data-scale 0.0005

@@ -8,6 +8,11 @@ under ``artifacts/bench/``.
   protocol_audit     — Tables 4 / 5 + Corollary 1
   join_and_scaling   — Tables 18 / 21 + Fig. 2b / App. K
   roofline_bench     — §Roofline (reads dry-run artifacts)
+  streaming          — eager vs streaming vs prefetch data paths
+                       (emits BENCH_streaming.json; also `run.py --streaming`)
+
+Select one module by name (``run.py streaming``) or flag (``run.py
+--streaming``); no argument runs everything.
 """
 
 from __future__ import annotations
@@ -17,7 +22,14 @@ import time
 
 
 def main() -> None:
-    from benchmarks import ablations, join_and_scaling, protocol_audit, roofline_bench, throughput
+    from benchmarks import (
+        ablations,
+        join_and_scaling,
+        protocol_audit,
+        roofline_bench,
+        streaming,
+        throughput,
+    )
 
     modules = [
         ("throughput", throughput),
@@ -25,8 +37,12 @@ def main() -> None:
         ("protocol_audit", protocol_audit),
         ("join_and_scaling", join_and_scaling),
         ("roofline", roofline_bench),
+        ("streaming", streaming),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = sys.argv[1].lstrip("-") if len(sys.argv) > 1 else None
+    names = [name for name, _ in modules]
+    if only is not None and only not in names:
+        raise SystemExit(f"unknown benchmark module {only!r}; choose from {names}")
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules:

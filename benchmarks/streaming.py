@@ -1,0 +1,167 @@
+"""Streaming-executor benchmark — eager vs incremental vs prefetch data paths.
+
+Measures the *real* data-side pipeline on CPU (no cost model): pipeline
+realization, DGAP rounds, grouping/alignment, bucket padding.  A configurable
+synthetic train-step cost (``--step-cost`` seconds of sleep, standing in for
+the jitted step the prefetcher overlaps with) exposes the overlap win.
+
+Reported per path:
+
+  * ``ttfs``      — time to first step (s): the eager path pays the whole
+    epoch's realization + protocol rounds before step 1; streaming pays O(D);
+  * ``steady``    — steady-state steps/s over the remaining steps;
+  * ``wall``      — end-to-end epoch wall time (s);
+  * ``hit_rate``  — prefetch hits / requests (prefetch path only);
+  * ``peak_window`` — peak realized-lengths resident in the admission window.
+
+Artifacts: ``<out>/streaming.json`` plus the top-level ``BENCH_streaming.json``
+perf-trajectory artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from benchmarks.common import csv_line
+from repro.core import BucketSpec, OdbConfig
+from repro.data import OnlineDynamicLoader, get_dataset
+
+
+def _consume(step_iter, step_cost: float) -> dict:
+    t0 = time.perf_counter()
+    t_first = None
+    steps = 0
+    samples = 0
+    for loader_step in step_iter:
+        if t_first is None:
+            t_first = time.perf_counter() - t0
+        steps += 1
+        samples += loader_step.metadata.emitted_samples
+        if step_cost > 0:
+            time.sleep(step_cost)  # stand-in for the jitted train step
+    wall = time.perf_counter() - t0
+    steady = 0.0
+    if steps > 1 and wall > (t_first or 0.0):
+        steady = (steps - 1) / (wall - (t_first or 0.0))
+    return {
+        "steps": steps,
+        "samples": samples,
+        "ttfs_s": t_first or 0.0,
+        "wall_s": wall,
+        "steady_steps_per_s": steady,
+    }
+
+
+def bench_paths(
+    dataset: str,
+    *,
+    data_scale: float,
+    world: int,
+    l_max: int,
+    buffer_size: int,
+    lookahead: int | None,
+    step_cost: float,
+    seed: int = 0,
+) -> dict:
+    def make_loader() -> OnlineDynamicLoader:
+        ds = get_dataset(dataset, scale=data_scale)
+        return OnlineDynamicLoader(
+            ds,
+            world_size=world,
+            config=OdbConfig(
+                l_max=l_max, buffer_size=buffer_size,
+                prefetch_factor=32, num_workers=2,
+            ),
+            bucket_spec=BucketSpec(min_len=64, max_len=16384, max_count=1024),
+            seed=seed,
+        )
+
+    rows: dict[str, dict] = {}
+
+    loader = make_loader()
+    rows["eager"] = _consume(loader.epoch(0), step_cost)
+
+    loader = make_loader()
+    rows["stream"] = _consume(
+        loader.streaming_epoch(0, lookahead=lookahead), step_cost
+    )
+    rows["stream"]["peak_window"] = loader.last_executor.window_stats().peak_resident
+
+    loader = make_loader()
+    rows["stream_prefetch"] = _consume(
+        loader.streaming_epoch(0, lookahead=lookahead, prefetch=True),
+        step_cost,
+    )
+    rows["stream_prefetch"]["peak_window"] = (
+        loader.last_executor.window_stats().peak_resident
+    )
+    if loader.last_prefetch_stats is not None:
+        rows["stream_prefetch"].update(
+            hit_rate=loader.last_prefetch_stats.hit_rate,
+            consumer_wait_s=loader.last_prefetch_stats.wait_s,
+        )
+    return rows
+
+
+def main(argv=None) -> list[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--dataset", default="ultrachat")
+    ap.add_argument("--data-scale", type=float, default=0.004)
+    ap.add_argument("--world", type=int, default=4)
+    ap.add_argument("--l-max", type=int, default=4096)
+    ap.add_argument("--buffer", type=int, default=64)
+    ap.add_argument("--lookahead", type=int, default=256)
+    ap.add_argument("--step-cost", type=float, default=0.002)
+    args = ap.parse_args(argv)  # None -> sys.argv (standalone CLI)
+
+    rows = bench_paths(
+        args.dataset,
+        data_scale=args.data_scale,
+        world=args.world,
+        l_max=args.l_max,
+        buffer_size=args.buffer,
+        lookahead=args.lookahead,
+        step_cost=args.step_cost,
+    )
+
+    lines = []
+    for path, r in rows.items():
+        derived = {
+            "steps": r["steps"],
+            "steady_steps_per_s": f"{r['steady_steps_per_s']:.2f}",
+            "ttfs_ms": f"{1e3 * r['ttfs_s']:.1f}",
+        }
+        if "hit_rate" in r:
+            derived["hit_rate"] = f"{r['hit_rate']:.3f}"
+        if "peak_window" in r:
+            derived["peak_window"] = r["peak_window"]
+        lines.append(csv_line(f"streaming/{path}", 1e6 * r["wall_s"], derived))
+
+    artifact = {
+        "config": {
+            "dataset": args.dataset,
+            "data_scale": args.data_scale,
+            "world": args.world,
+            "l_max": args.l_max,
+            "buffer": args.buffer,
+            "lookahead": args.lookahead,
+            "step_cost_s": args.step_cost,
+        },
+        "paths": rows,
+    }
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "streaming.json").write_text(json.dumps(artifact, indent=1))
+    # Top-level perf-trajectory artifact (ISSUE 1 acceptance contract).
+    pathlib.Path("BENCH_streaming.json").write_text(json.dumps(artifact, indent=1))
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in main():
+        print(line)

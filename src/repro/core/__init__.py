@@ -44,10 +44,12 @@ from repro.core.protocol import (
     IDLE,
     BoundedTerminationError,
     EpochAudit,
+    EpochRunner,
     IterationResult,
     OdbConfig,
     OdbProtocolEngine,
     RankRuntime,
     RoundRecord,
+    ViewSource,
     run_epoch,
 )

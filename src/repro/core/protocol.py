@@ -85,12 +85,46 @@ class RankCounters:
     recirculated_views: int = 0
 
 
+class ViewSource:
+    """Lazy per-rank sampler-view source (streaming admission; DESIGN.md §9).
+
+    The offline engine materializes the whole shard into ``R`` up front; a
+    ``ViewSource`` instead hands views out incrementally so realized lengths
+    stay bounded by the admission window.  The protocol only needs three
+    observables per rank:
+
+      * ``take(rank, k)``   — up to ``k`` more realized views (may under-fill
+        when the admission window's lookahead budget is exhausted);
+      * ``exhausted(rank)`` — no further views will ever arrive for ``rank``;
+      * ``remaining(rank)`` — count of not-yet-delivered views (known exactly:
+        the sampler's padded order has fixed size ``M = W·ceil(N/W)`` even
+        though *lengths* are unknown until realization).
+    """
+
+    def take(self, rank: int, k: int) -> list[Sample]:  # pragma: no cover
+        raise NotImplementedError
+
+    def exhausted(self, rank: int) -> bool:  # pragma: no cover
+        raise NotImplementedError
+
+    def remaining(self, rank: int) -> int:  # pragma: no cover
+        raise NotImplementedError
+
+
 class RankRuntime:
     """Per-rank protocol state: the (R, Q, B, E) machine of App. C.1."""
 
-    def __init__(self, rank: int, views: Sequence[Sample], config: OdbConfig):
+    def __init__(
+        self,
+        rank: int,
+        views: Sequence[Sample],
+        config: OdbConfig,
+        *,
+        source: ViewSource | None = None,
+    ):
         self.rank = rank
         self.config = config
+        self.source = source  # lazy feeder of R (None = offline/materialized)
         self.pending: collections.deque[Sample] = collections.deque(views)  # R
         self.worker_queue: collections.deque[Sample] = collections.deque()  # Q
         self.buffer: list[Sample] = []  # B
@@ -98,6 +132,7 @@ class RankRuntime:
         self.out_queue: collections.deque[Group | None] = collections.deque()
         self.counters = RankCounters()
         self.local_finished = False
+        self.admitted = len(self.pending)  # views ever entered into R
         # Straggler simulation: max views moved Q->B per round (None = all).
         self.drain_rate: int | None = None
 
@@ -119,6 +154,23 @@ class RankRuntime:
     def total_views(self) -> int:
         return sum(self.component_sizes())
 
+    @property
+    def source_drained(self) -> bool:
+        """True when no further views can ever enter ``R`` for this rank."""
+        return self.source is None or self.source.exhausted(self.rank)
+
+    @property
+    def no_more_input(self) -> bool:
+        """R and Q empty and the source (if any) can never refill them."""
+        return not self.pending and not self.worker_queue and self.source_drained
+
+    @property
+    def idx_budget(self) -> int:
+        """|R| plus the source's undelivered tail — equal to the offline
+        engine's ``len(pending)`` for the same (seed, epoch, config)."""
+        extra = 0 if self.source is None else self.source.remaining(self.rank)
+        return len(self.pending) + extra
+
     # -- transition primitives (App. C.1) -------------------------------------
     def fetch_and_drain(self) -> None:
         """Fetch R->Q up to the depth envelope, then drain Q->B.
@@ -130,6 +182,10 @@ class RankRuntime:
         buffers group over wider windows (Table 17's mechanism).
         """
         budget = self.config.depth - self.outstanding
+        if self.source is not None and budget > len(self.pending):
+            fresh = self.source.take(self.rank, budget - len(self.pending))
+            self.pending.extend(fresh)
+            self.admitted += len(fresh)
         while budget > 0 and self.pending:
             self.worker_queue.append(self.pending.popleft())
             self.counters.fetched += 1
@@ -156,7 +212,7 @@ class RankRuntime:
         fetches/drains for it (skip behaviour, Lemma 2 case (b)).
         """
         ready = len(self.buffer) >= self.config.buffer_size or (
-            not self.pending and not self.worker_queue and self.buffer
+            self.no_more_input and self.buffer
         )
         if not ready:
             return []
@@ -166,7 +222,7 @@ class RankRuntime:
         """n_groups ∈ {n>0, 0, -1}: produced / insufficient / finished."""
         if groups:
             return len(groups)
-        if not self.pending and not self.worker_queue and not self.buffer:
+        if self.no_more_input and not self.buffer:
             return -1
         return 0
 
@@ -244,6 +300,8 @@ class OdbProtocolEngine:
         *,
         collective: LoopbackCollective | None = None,
         round_margin: int = 64,
+        source: ViewSource | None = None,
+        quota_hint: int | None = None,
     ) -> None:
         world = len(per_rank_views)
         if world == 0:
@@ -253,13 +311,19 @@ class OdbProtocolEngine:
         self.config = config
         self.collective = collective or LoopbackCollective(world)
         self.ranks = [
-            RankRuntime(r, views, config) for r, views in enumerate(per_rank_views)
+            RankRuntime(r, views, config, source=source)
+            for r, views in enumerate(per_rank_views)
         ]
         self.records: list[RoundRecord] = []
         self._round_index = 0
         # Theorem 4 envelope: q + O(D) rounds. The constant in O(D) covers
-        # drain-rate-1 stragglers (one view per round) plus slack.
-        q = max(len(v) for v in per_rank_views) if per_rank_views else 0
+        # drain-rate-1 stragglers (one view per round) plus slack.  A lazy
+        # source with a lookahead tighter than the depth envelope can throttle
+        # fetches to O(lookahead/W) views per rank per round, so the streaming
+        # executor widens round_margin accordingly (stream/executor.py).
+        q = quota_hint
+        if q is None:
+            q = max(len(v) for v in per_rank_views) if per_rank_views else 0
         self.max_rounds = q + config.depth + round_margin
 
     @property
@@ -270,8 +334,17 @@ class OdbProtocolEngine:
         """Lyapunov Φ = M - Σ|E_r| (App. C.2)."""
         return sum(len(r.pending) + len(r.worker_queue) + len(r.buffer) for r in self.ranks)
 
-    def check_no_leak(self, expected_total: int) -> None:
-        """Lemma 1: R ⊎ Q ⊎ B ⊎ E == D_r at every round, on every rank."""
+    def check_no_leak(self, expected_total: int | None = None) -> None:
+        """Lemma 1: R ⊎ Q ⊎ B ⊎ E == admitted views at every round, per rank.
+
+        Offline, ``admitted`` is frozen at construction so this is the classic
+        conservation check against the shard size; with a lazy source it grows
+        as views are admitted, and conservation must hold against the running
+        total (views in flight inside the admission window are not yet the
+        engine's responsibility).
+        """
+        if expected_total is None:
+            expected_total = sum(r.admitted for r in self.ranks)
         total = sum(r.total_views for r in self.ranks)
         if total != expected_total:
             raise AssertionError(
@@ -297,7 +370,7 @@ class OdbProtocolEngine:
             sizes = [g.size for g in groups]
             tokens = [g.real_tokens for g in groups]
             return {
-                "idx_budget": len(self.ranks[r].pending),
+                "idx_budget": self.ranks[r].idx_budget,
                 "n_groups": status,
                 "sizes": sizes,
                 "tokens": tokens,
@@ -360,11 +433,7 @@ class OdbProtocolEngine:
 
         # Phase 5: join-mode local-finish advertisement for the *next* round.
         for rank in self.ranks:
-            if (
-                not rank.pending
-                and not rank.worker_queue
-                and not rank.buffer
-            ):
+            if rank.no_more_input and not rank.buffer:
                 rank.local_finished = True
 
         record = RoundRecord(
@@ -384,7 +453,6 @@ class OdbProtocolEngine:
     # -- full logical iteration ---------------------------------------------------
     def run_iteration(self) -> IterationResult:
         """Run rounds until the mode-specific termination predicate fires."""
-        expected_total = sum(r.total_views for r in self.ranks)
         start_round = self._round_index
         emitted_start = sum(len(r.emitted) for r in self.ranks)
         terminated_by = ""
@@ -395,7 +463,7 @@ class OdbProtocolEngine:
                     f"(Φ={self.potential()})"
                 )
             record = self.run_round()
-            self.check_no_leak(expected_total)
+            self.check_no_leak()
             if self.config.join_mode:
                 if all(s == -1 for s in record.statuses):
                     terminated_by = "join_all_finished"
@@ -429,6 +497,11 @@ class OdbProtocolEngine:
         for _ in range(steps):
             yield [r.out_queue.popleft() for r in self.ranks]
 
+    def pop_aligned_steps(self) -> list[list[Group | None]]:
+        """Drain every currently-queued aligned step (used by EpochRunner to
+        hand steps out as soon as a round produces them)."""
+        return list(self.aligned_steps())
+
 
 # ---------------------------------------------------------------------------------
 # Epoch-level runners (trainer-side control logic).
@@ -457,6 +530,221 @@ class EpochAudit:
         return self.sampler_views - self.dataset_identities  # P = M - N
 
 
+class EpochRunner:
+    """Resumable ``step()``-at-a-time epoch engine (Theorems 1/2 control).
+
+    Owns the trainer-side chaining logic that used to live inside the
+    monolithic ``run_epoch`` loop: logical-iteration construction, join /
+    non-join termination, quota crossing, and the identity/emit accounting
+    that becomes the :class:`EpochAudit`.  Each ``step()`` call returns the
+    next aligned per-rank step (or ``None`` once the epoch is complete), so a
+    trainer — or the streaming executor — can interleave protocol progress
+    with compute and checkpoint between any two steps.
+
+    Two scheduling modes:
+
+      * ``incremental=False`` — exact ``run_epoch`` semantics: each logical
+        iteration's rounds run to termination before its steps are delivered
+        (the offline regime; audits are bit-identical to the historical
+        implementation);
+      * ``incremental=True`` — rounds interleave with delivery: after every
+        protocol round, newly aligned steps are handed out immediately, so
+        the first train step starts after O(D) admitted views instead of
+        after the whole epoch's rounds.  In non-join mode the quota crossing
+        also stops round execution eagerly (the remaining fetched-but-unused
+        views are counted as abandoned, Lemma 4).  The delivered *step
+        sequence* is identical in both modes whenever ``output_capacity`` is
+        unbounded, because rounds are a pure function of engine state that
+        popping the output queues cannot influence.
+
+    ``make_engine(iteration)`` builds the protocol engine for one logical
+    iteration; with a lazy :class:`ViewSource` attached, views (and their
+    realized lengths) are admitted on demand — see ``repro/stream``.
+    """
+
+    def __init__(
+        self,
+        make_engine: Callable[[int], "OdbProtocolEngine"],
+        dataset_identities: int,
+        config: OdbConfig,
+        *,
+        world_size: int,
+        max_logical_iterations: int = 64,
+        incremental: bool = False,
+    ) -> None:
+        self.make_engine = make_engine
+        self.n = dataset_identities
+        self.config = config
+        self.world = world_size
+        self.quota = world_size * math.ceil(dataset_identities / world_size)
+        self.max_logical_iterations = max_logical_iterations
+        self.incremental = incremental
+        # -- resumable accounting state (serialized by stream/state.py) -----
+        self.iteration = 0
+        self.emitted_total = 0
+        self.emitted_ids: set[int] = set()
+        self.rounds = 0
+        self.abandoned: list[int] = []
+        self.steps_delivered = 0
+        self.terminated_by: str | None = None
+        self._ready: collections.deque[list[Group | None]] = collections.deque()
+        self._engine: OdbProtocolEngine | None = None
+        self._iteration_open = False
+        self._iter_rounds = 0
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def engine(self) -> "OdbProtocolEngine | None":
+        return self._engine
+
+    # -- iteration lifecycle --------------------------------------------------
+    def _open_iteration(self) -> None:
+        self._engine = self.make_engine(self.iteration)
+        self._iteration_open = True
+        self._iter_rounds = 0
+
+    def _close_iteration(self) -> None:
+        """Bookkeeping after an iteration's steps are fully delivered."""
+        self.iteration += 1
+        self._iteration_open = False
+        self._engine = None
+        if self.config.join_mode:
+            self.terminated_by = self.terminated_by or "join_all_finished"
+            self._done = True
+        elif self.emitted_total >= self.n:
+            self._done = True
+        elif self.iteration >= self.max_logical_iterations:
+            raise BoundedTerminationError(
+                f"quota not closed after {self.iteration} logical iterations "
+                f"({self.emitted_total}/{self.n})"
+            )
+
+    def _finish_iteration_rounds(self, terminated_by: str) -> None:
+        """The termination predicate fired: absorb round/abandon accounting."""
+        assert self._engine is not None
+        self.rounds += self._iter_rounds
+        self.abandoned.append(sum(r.outstanding for r in self._engine.ranks))
+        self.terminated_by = terminated_by
+        self._engine = None  # rounds done; steps may still sit in _ready
+
+    # -- batch mode: run a whole iteration's rounds, then deliver -------------
+    def _advance_batch(self) -> None:
+        if self._iteration_open:
+            self._close_iteration()
+            if self._done:
+                return
+        self._open_iteration()
+        assert self._engine is not None
+        result = self._engine.run_iteration()
+        self._iter_rounds = result.rounds
+        ready = self._engine.pop_aligned_steps()
+        self._finish_iteration_rounds(result.terminated_by)
+        self._ready.extend(ready)
+
+    # -- incremental mode: one protocol round per pass ------------------------
+    def _advance_incremental(self) -> None:
+        while not self._ready and not self._done:
+            if self._engine is None:
+                if self._iteration_open:
+                    self._close_iteration()
+                    continue
+                self._open_iteration()
+            engine = self._engine
+            assert engine is not None
+            if self._iter_rounds > engine.max_rounds:
+                raise BoundedTerminationError(
+                    f"exceeded Theorem-4 envelope of {engine.max_rounds} "
+                    f"rounds (Φ={engine.potential()})"
+                )
+            record = engine.run_round()
+            engine.check_no_leak()
+            self._iter_rounds += 1
+            self._ready.extend(engine.pop_aligned_steps())
+            if self.config.join_mode:
+                if all(s == -1 for s in record.statuses):
+                    self._finish_iteration_rounds("join_all_finished")
+            elif any(s == -1 for s in record.statuses):
+                self._finish_iteration_rounds("nonjoin_any_finished")
+
+    # -- delivery -------------------------------------------------------------
+    def _account(self, step: list[Group | None]) -> None:
+        real = [g for g in step if g is not IDLE]
+        self.emitted_total += sum(g.size for g in real)
+        for g in real:
+            self.emitted_ids.update(s.identity for s in g.samples)
+        self.steps_delivered += 1
+        if not self.config.join_mode and self.emitted_total >= self.n:
+            # Theorem 2: the final quota crossing happens inside one aligned
+            # step, so S_emit - N <= S_max.  Stop delivering; abandon the
+            # rest of the iteration (rounds + queued steps).
+            if self._engine is not None:
+                self._finish_iteration_rounds("nonjoin_quota_crossed")
+            self._ready.clear()
+            if self._iteration_open:
+                # Guarded so a requeued crossing step re-delivered after a
+                # prefetch rollback doesn't close the iteration twice.
+                self.iteration += 1
+                self._iteration_open = False
+            self._done = True
+
+    def requeue(self, steps: Sequence[list[Group | None]]) -> None:
+        """Roll delivered-but-unconsumed steps back into the ready queue.
+
+        The prefetch path delivers steps into a staging queue ahead of the
+        consumer; when the consumer abandons the epoch, the staged tail is
+        pushed back (in order) so a checkpoint taken afterwards reflects the
+        consumer's frontier exactly.  Emit counts are reversed; emitted
+        identities are not — the identical steps re-deliver the identical
+        identities, so the coverage union is unchanged.
+        """
+        for step in reversed(list(steps)):
+            real = [g for g in step if g is not IDLE]
+            self.emitted_total -= sum(g.size for g in real)
+            self.steps_delivered -= 1
+            self._ready.appendleft(step)
+
+    def step(self) -> list[Group | None] | None:
+        """Return the next aligned per-rank step, or None when complete."""
+        while not self._ready:
+            if self._done:
+                return None
+            if self.incremental:
+                self._advance_incremental()
+            else:
+                self._advance_batch()
+        out = self._ready.popleft()
+        self._account(out)
+        return out
+
+    def steps(self) -> Iterator[list[Group | None]]:
+        while True:
+            s = self.step()
+            if s is None:
+                return
+            yield s
+
+    def audit(self) -> EpochAudit:
+        n = self.n
+        return EpochAudit(
+            dataset_identities=n,
+            world_size=self.world,
+            sampler_views=self.quota,
+            emitted_views=self.emitted_total,
+            emitted_identities=len(self.emitted_ids),
+            surplus_emits=self.emitted_total - n,
+            logical_iterations=self.iteration,
+            rounds=self.rounds,
+            abandoned_views_per_iteration=self.abandoned,
+            eta_quota=max(0.0, 1.0 - self.emitted_total / n) if n else 0.0,
+            eta_identity=1.0 - len(self.emitted_ids) / n if n else 0.0,
+            terminal_epoch=self.emitted_total / n if n else 0.0,
+        )
+
+
 def run_epoch(
     make_views: Callable[[int], Sequence[Sequence[Sample]]],
     dataset_identities: int,
@@ -468,64 +756,30 @@ def run_epoch(
 ) -> EpochAudit:
     """Run one training epoch's worth of sampler quota through the protocol.
 
-    ``make_views(iteration)`` returns the per-rank sampler-view lists for
-    logical iteration ``iteration`` (re-shuffled per iteration, mirroring the
-    re-seeded DistributedSampler).  In join mode a single logical iteration
-    emits the full multiset M (Theorem 1).  In non-join mode iterations are
-    chained until ``S_emit >= N`` (Theorem 2).
+    Thin wrapper over :class:`EpochRunner` (batch mode) preserving the
+    historical contract: ``make_views(iteration)`` returns the per-rank
+    sampler-view lists for logical iteration ``iteration`` (re-shuffled per
+    iteration, mirroring the re-seeded DistributedSampler).  In join mode a
+    single logical iteration emits the full multiset M (Theorem 1).  In
+    non-join mode iterations are chained until ``S_emit >= N`` (Theorem 2).
     """
     world = len(make_views(0))
-    n = dataset_identities
-    quota = world * math.ceil(n / world)
-    emitted_total = 0
-    emitted_ids: set[int] = set()
-    rounds = 0
-    abandoned: list[int] = []
-    iteration = 0
-    while True:
-        views = make_views(iteration)
-        engine = OdbProtocolEngine(views, config)
+
+    def make_engine(iteration: int) -> OdbProtocolEngine:
+        engine = OdbProtocolEngine(make_views(iteration), config)
         if drain_rates is not None:
             for rank, rate in zip(engine.ranks, drain_rates):
                 rank.drain_rate = rate
-        result = engine.run_iteration()
-        rounds += result.rounds
-        abandoned.append(result.abandoned_views)
-        quota_crossed = False
-        for step in engine.aligned_steps():
-            real = [g for g in step if g is not IDLE]
-            step_views = sum(g.size for g in real)
-            emitted_total += step_views
-            for g in real:
-                emitted_ids.update(s.identity for s in g.samples)
-            if on_step is not None:
-                on_step(step)
-            if not config.join_mode and emitted_total >= n:
-                # Theorem 2: the final quota crossing happens inside one
-                # aligned step, so S_emit - N <= S_max.  Stop delivering.
-                quota_crossed = True
-                break
-        iteration += 1
-        if config.join_mode:
-            break  # one logical iteration emits the full multiset
-        if quota_crossed or emitted_total >= n:
-            break
-        if iteration >= max_logical_iterations:
-            raise BoundedTerminationError(
-                f"quota not closed after {iteration} logical iterations "
-                f"({emitted_total}/{n})"
-            )
-    return EpochAudit(
-        dataset_identities=n,
+        return engine
+
+    runner = EpochRunner(
+        make_engine,
+        dataset_identities,
+        config,
         world_size=world,
-        sampler_views=quota,
-        emitted_views=emitted_total,
-        emitted_identities=len(emitted_ids),
-        surplus_emits=emitted_total - n,
-        logical_iterations=iteration,
-        rounds=rounds,
-        abandoned_views_per_iteration=abandoned,
-        eta_quota=max(0.0, 1.0 - emitted_total / n) if n else 0.0,
-        eta_identity=1.0 - len(emitted_ids) / n if n else 0.0,
-        terminal_epoch=emitted_total / n if n else 0.0,
+        max_logical_iterations=max_logical_iterations,
     )
+    for step in runner.steps():
+        if on_step is not None:
+            on_step(step)
+    return runner.audit()

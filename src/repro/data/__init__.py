@@ -11,7 +11,12 @@ from repro.data.datasets import (
     DatasetSpec,
     get_dataset,
 )
-from repro.data.loader import LoaderStep, OnlineDynamicLoader, odb_schedule
+from repro.data.loader import (
+    LoaderStep,
+    OnlineDynamicLoader,
+    PackedLoaderStep,
+    odb_schedule,
+)
 from repro.data.oracles import (
     LengthCache,
     StaleCacheError,

@@ -17,6 +17,7 @@ The loader exposes two surfaces:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Iterator, Sequence
 
@@ -34,7 +35,17 @@ from repro.core.metadata import EmitAccounting, StepMetadata, step_metadata
 from repro.core.protocol import IDLE, EpochAudit, OdbConfig, run_epoch
 from repro.data.datasets import DatasetSpec
 from repro.data.pipeline import PipelinePolicy, realize_lengths
-from repro.data.sampler import SamplerSpec, shard_views
+from repro.data.sampler import (
+    ITERATION_VIEW_ID_STRIDE,
+    SamplerSpec,
+    iteration_shuffle_epoch,
+    shard_views,
+)
+
+# NOTE: repro.stream is imported lazily inside streaming_epoch().  A
+# module-level import would close an import cycle (stream.executor ->
+# repro.data.pipeline -> repro.data.__init__ -> loader -> stream) and make
+# `import repro.stream` fail whenever it is the first repro import.
 
 
 def odb_schedule(
@@ -51,7 +62,10 @@ def odb_schedule(
 
     def make_views(iteration: int):
         return shard_views(
-            spec, epoch * 1000 + iteration, lengths, view_id_base=iteration * 10**9
+            spec,
+            iteration_shuffle_epoch(epoch, iteration),
+            lengths,
+            view_id_base=iteration * ITERATION_VIEW_ID_STRIDE,
         )
 
     steps: list[list[Group | None]] = []
@@ -73,11 +87,11 @@ class LoaderStep:
 
 @dataclasses.dataclass
 class PackedLoaderStep:
-    """Beyond-paper emission mode (DESIGN.md §8a): each rank's group is
-    flattened to one segment-id-tagged token stream for the Pallas
-    segment-aware attention kernel — padding decays to the single tail
-    bucket, merging the paper's ODB and Packing rows without the GPU varlen
-    caveat."""
+    """Beyond-paper emission mode (see DESIGN.md §8a "Packed-segment
+    emission"): each rank's group is flattened to one segment-id-tagged token
+    stream for the Pallas segment-aware attention kernel — padding decays to
+    the single tail bucket, merging the paper's ODB and Packing rows without
+    the GPU varlen caveat."""
 
     batches: list[PackedBatch]
     metadata: StepMetadata
@@ -114,6 +128,8 @@ class OnlineDynamicLoader:
         )
         self.accounting = EmitAccounting()
         self.last_audit: EpochAudit | None = None
+        self.last_executor = None  # StreamExecutor of the last streaming epoch
+        self.last_prefetch_stats = None
         # grid floor stays below the token budget so near-empty tail
         # groups don't inflate to a full window
         self.packed_spec = PackedBucketSpec(
@@ -121,35 +137,161 @@ class OnlineDynamicLoader:
             max_tokens=max(2 * config.l_max, 2048),
         )
 
+    def _pad_step(self, index: int, step: list[Group | None]) -> LoaderStep:
+        """Bucket-pad one aligned step (IDLE ranks become zero batches).
+
+        Pure: ``accounting`` is updated at the *consumption* point, not here
+        — the prefetch producer pads steps the consumer may never take, and
+        abandoned staged steps must not count as emitted.
+        """
+        fallback_shape = self.bucket_spec.bucket_shape(1, self.bucket_spec.min_len)
+        padded: list[PaddedBatch] = []
+        shape = None
+        for group in step:
+            if group is not IDLE:
+                pb = pad_group(group, self.bucket_spec, vocab_size=self.vocab_size)
+                padded.append(pb)
+                shape = pb.shape
+        row: list[PaddedBatch] = []
+        j = 0
+        for group in step:
+            if group is IDLE:
+                row.append(idle_batch(shape or fallback_shape))
+            else:
+                row.append(padded[j])
+                j += 1
+        return LoaderStep(batches=row, metadata=step_metadata(index, step))
+
     def epoch(self, epoch: int = 0) -> Iterator[LoaderStep]:
-        # Online observability: lengths realized per epoch (augmentation-
-        # dependent), never cached across policy changes.
+        """Eager path: realize every length, schedule the whole epoch, then
+        deliver (the offline regime the streaming path replaces — kept for
+        audits and as the equivalence reference)."""
         records = self.dataset.records(self.seed)
         lengths = realize_lengths(records, self.policy, epoch)
         steps, audit = odb_schedule(
             lengths, self.world_size, self.config, seed=self.seed, epoch=epoch
         )
         self.last_audit = audit
-        fallback_shape = self.bucket_spec.bucket_shape(1, self.bucket_spec.min_len)
         for i, step in enumerate(steps):
-            padded: list[PaddedBatch] = []
-            shape = None
-            for group in step:
-                if group is not IDLE:
-                    pb = pad_group(group, self.bucket_spec, vocab_size=self.vocab_size)
-                    padded.append(pb)
-                    shape = pb.shape
-            row: list[PaddedBatch] = []
-            j = 0
-            for group in step:
-                if group is IDLE:
-                    row.append(idle_batch(shape or fallback_shape))
-                else:
-                    row.append(padded[j])
-                    j += 1
-            md = step_metadata(i, step)
-            self.accounting.update(md)
-            yield LoaderStep(batches=row, metadata=md)
+            loader_step = self._pad_step(i, step)
+            self.accounting.update(loader_step.metadata)
+            yield loader_step
+
+    def streaming_epoch(
+        self,
+        epoch: int = 0,
+        *,
+        lookahead: int | None = None,
+        prefetch: bool = False,
+        prefetch_depth: int = 2,
+        resume_from: "StreamCheckpoint | None" = None,
+        finalize_audit: bool = True,
+    ) -> Iterator[LoaderStep]:
+        """Online path (DESIGN.md §9): batch formation happens at the point
+        where realized lengths become observable.
+
+        Views are admitted through a bounded-lookahead window (at most
+        ``lookahead`` realized lengths in flight — defaults to the sampler's
+        full view multiset M, which reproduces the eager schedule
+        bit-for-bit), protocol rounds interleave with delivery, and with
+        ``prefetch=True`` realization + grouping + padding run in a
+        background thread, double-buffered against the jitted train step.
+
+        Mid-epoch state is checkpointable: take ``loader.last_executor
+        .checkpoint()`` between steps, then pass the checkpoint back as
+        ``resume_from`` to continue the identical step sequence.  With
+        ``prefetch=True`` the producer runs ahead of the consumer, so to
+        checkpoint exactly at the consumer's frontier, close the iterator
+        first (with ``finalize_audit=False``) — the staged-but-unconsumed
+        tail is rolled back into the executor on close — and checkpoint
+        afterwards.  A checkpoint taken while the producer is live is still
+        a *consistent* step boundary, but of the producer-side frontier.
+
+        The epoch audit is published to ``last_audit`` when iteration
+        completes.
+        """
+        from repro.stream.executor import StreamExecutor
+        from repro.stream.prefetch import PrefetchIterator
+
+        records = self.dataset.records(self.seed)
+        if resume_from is not None:
+            ck_epoch = resume_from.epoch
+            ck_lookahead = resume_from.payload["lookahead"]
+            # epoch=0 is the default and means "whatever the checkpoint
+            # holds"; any explicit different epoch is a caller error.
+            if epoch not in (0, ck_epoch):
+                raise ValueError(
+                    f"resume_from checkpoint is for epoch {ck_epoch}, "
+                    f"but epoch={epoch} was requested"
+                )
+            if lookahead is not None and lookahead != ck_lookahead:
+                raise ValueError(
+                    f"resume_from checkpoint was taken with lookahead "
+                    f"{ck_lookahead}, but lookahead={lookahead} was requested"
+                )
+            executor = StreamExecutor.resume(resume_from, records, self.policy)
+        else:
+            executor = StreamExecutor(
+                records,
+                self.policy,
+                self.world_size,
+                self.config,
+                seed=self.seed,
+                epoch=epoch,
+                lookahead=lookahead,
+            )
+        self.last_executor = executor
+
+        staged: collections.deque[list] = collections.deque()
+
+        def produce(track: bool = False) -> Iterator[LoaderStep]:
+            while True:
+                step = executor.step()
+                if step is None:
+                    return
+                padded = self._pad_step(executor.runner.steps_delivered - 1, step)
+                if track:
+                    staged.append(step)
+                yield padded
+
+        try:
+            if prefetch:
+                it = PrefetchIterator(produce(track=True), depth=prefetch_depth)
+                self.last_prefetch_stats = it.stats
+                try:
+                    for padded in it:
+                        staged.popleft()  # consumed: off the rollback ledger
+                        self.accounting.update(padded.metadata)
+                        yield padded
+                finally:
+                    # Blocks until the producer's in-flight step finishes
+                    # (bounded by the protocol termination envelope) — the
+                    # rollback below is only sound with the producer stopped.
+                    it.close()
+                    # Rewind the executor to the consumer's frontier: the
+                    # producer ran ahead, and the staged-but-unconsumed tail
+                    # would otherwise be counted delivered yet never trained
+                    # on — a silent coverage gap across checkpoint/resume.
+                    if staged:
+                        executor.requeue(list(staged))
+                        staged.clear()
+            else:
+                for padded in produce():
+                    self.accounting.update(padded.metadata)
+                    yield padded
+        finally:
+            # Epoch-level audit contract (Theorem 1): even when the consumer
+            # stops early (max_steps), finish the remaining *data-side*
+            # schedule — grouping/alignment only, no padding, no compute — so
+            # ``last_audit`` reflects the full epoch exactly like the eager
+            # path.  ``finalize_audit=False`` skips the drain for callers
+            # that must exit promptly (preemption after a checkpoint): they
+            # hold the executor (``last_executor``) and its checkpoint, and
+            # ``last_audit`` then reflects only the delivered prefix.
+            if finalize_audit:
+                while executor.step() is not None:
+                    pass
+            self.last_audit = executor.audit()
 
     def packed_epoch(self, epoch: int = 0):
         """Iterate packed-segment steps (beyond-paper emission; see

@@ -101,6 +101,12 @@ def run_pipeline(record: RawRecord, policy: PipelinePolicy, epoch: int = 0) -> i
 def realize_lengths(
     records: list[RawRecord], policy: PipelinePolicy, epoch: int = 0
 ) -> list[int]:
+    """Eager full-dataset realization (the offline regime).
+
+    The streaming path deliberately has no list-returning counterpart:
+    ``AdmissionWindow`` (DESIGN.md §9.1) calls :func:`run_pipeline` one view
+    at a time so peak realized-lengths in flight stays within its lookahead.
+    """
     return [run_pipeline(r, policy, epoch) for r in records]
 
 

@@ -18,6 +18,18 @@ from typing import Sequence
 from repro.core.grouping import Sample
 
 
+# Logical-iteration addressing shared by the eager scheduler (odb_schedule)
+# and the streaming executor.  Bit-exact eager/stream equivalence — and the
+# validity of existing stream checkpoints — depends on both paths using
+# these, never inline literals.
+ITERATION_VIEW_ID_STRIDE = 10**9
+
+
+def iteration_shuffle_epoch(epoch: int, iteration: int) -> int:
+    """Shuffle-epoch for logical iteration ``iteration`` of epoch ``epoch``."""
+    return epoch * 1000 + iteration
+
+
 @dataclasses.dataclass(frozen=True)
 class SamplerSpec:
     dataset_size: int  # N identities

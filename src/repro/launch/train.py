@@ -39,6 +39,18 @@ def main() -> None:
     ap.add_argument("--non-join", action="store_true")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument(
+        "--eager", action="store_true",
+        help="offline data path (full-epoch length realization) instead of "
+             "the default streaming executor",
+    )
+    ap.add_argument(
+        "--lookahead", type=int, default=None,
+        help="admission-window bound on realized lengths in flight "
+             "(default: full view multiset, reproducing the eager schedule)",
+    )
+    ap.add_argument("--no-prefetch", action="store_true")
+    ap.add_argument("--prefetch-depth", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -60,6 +72,8 @@ def main() -> None:
         TrainerConfig(
             checkpoint_dir=args.checkpoint_dir, checkpoint_every=20,
             log_every=5, max_steps=args.steps,
+            streaming=not args.eager, prefetch=not args.no_prefetch,
+            prefetch_depth=args.prefetch_depth, lookahead=args.lookahead,
         ),
     )
 
@@ -88,6 +102,9 @@ def main() -> None:
     audit = loader.last_audit
     if audit:
         print(f"eta_identity={audit.eta_identity} eta_quota={audit.eta_quota}")
+    if loader.last_prefetch_stats is not None:
+        st = loader.last_prefetch_stats
+        print(f"prefetch hit_rate={st.hit_rate:.2f} waits={st.wait_s:.3f}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Streaming DGAP execution: bounded-lookahead admission, incremental
+scheduling, async prefetch, and resumable loader state (DESIGN.md §9)."""
+
+from repro.stream.executor import StreamExecutor
+from repro.stream.prefetch import PrefetchIterator, PrefetchStats
+from repro.stream.state import StreamCheckpoint
+from repro.stream.window import AdmissionWindow, WindowStats
+
+__all__ = [
+    "AdmissionWindow",
+    "PrefetchIterator",
+    "PrefetchStats",
+    "StreamCheckpoint",
+    "StreamExecutor",
+    "WindowStats",
+]

@@ -1,0 +1,306 @@
+"""Streaming DGAP executor (DESIGN.md §9.2).
+
+``StreamExecutor`` makes ODB genuinely online: the incremental
+:class:`repro.core.protocol.EpochRunner` drives protocol rounds one at a
+time, pulling sampler views through the bounded-lookahead
+:class:`AdmissionWindow` — realized lengths enter existence only as the
+window admits them, and aligned steps leave the executor as soon as a round
+produces them.  The full per-epoch length list is never materialized.
+
+Equivalence guarantee (tests/test_stream.py): with ``lookahead >= M`` the
+window never throttles a fetch, every protocol round sees exactly the state
+the offline engine would, and the delivered step sequence is bit-for-bit the
+``odb_schedule`` sequence for the same (seed, epoch, config).  With a tighter
+lookahead the schedule legitimately differs — grouping sees a narrower
+window — but Theorem 1 coverage is unchanged: every view is still admitted,
+fetched, grouped and emitted exactly once.
+
+Checkpoint/resume: ``checkpoint()`` between any two ``step()`` calls
+serializes window cursor, residual pools and emit accounting
+(stream/state.py); ``StreamExecutor.resume`` reconstructs an executor that
+continues the identical step sequence, so mid-epoch preemption preserves
+exact-identity coverage.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Iterator
+
+from repro.core.grouping import Group
+from repro.core.protocol import (
+    EpochAudit,
+    EpochRunner,
+    OdbConfig,
+    OdbProtocolEngine,
+)
+from repro.data.pipeline import PipelinePolicy, RawRecord
+from repro.data.sampler import (
+    ITERATION_VIEW_ID_STRIDE,
+    SamplerSpec,
+    iteration_shuffle_epoch,
+)
+from repro.stream.state import (
+    STATE_VERSION,
+    StreamCheckpoint,
+    load_rank_state,
+    rank_state_dict,
+    step_from_json,
+    step_to_json,
+)
+from repro.stream.window import AdmissionWindow, WindowStats
+
+
+class StreamExecutor:
+    """Step-at-a-time ODB epoch over a bounded admission window."""
+
+    def __init__(
+        self,
+        records: list[RawRecord],
+        policy: PipelinePolicy,
+        world_size: int,
+        config: OdbConfig,
+        *,
+        seed: int = 0,
+        epoch: int = 0,
+        lookahead: int | None = None,
+        max_logical_iterations: int = 64,
+        dataset_identities: int | None = None,
+    ) -> None:
+        n = len(records) if dataset_identities is None else dataset_identities
+        self.records = records
+        self.policy = policy
+        self.config = config
+        self.seed = seed
+        self.epoch = epoch
+        self.max_logical_iterations = max_logical_iterations
+        self.spec = SamplerSpec(dataset_size=n, world_size=world_size, seed=seed)
+        self.lookahead = (
+            self.spec.total_views if lookahead is None else lookahead
+        )
+        if self.lookahead < world_size:
+            # Fail at construction, not at the first window build: a full
+            # lookahead budget could otherwise hold no view for the
+            # requesting rank (see AdmissionWindow).
+            raise ValueError(
+                f"lookahead {self.lookahead} < world_size {world_size}"
+            )
+        if config.output_capacity is not None:
+            # Incremental delivery drains out_queue after every round, so the
+            # C_r envelope would never bind and the schedule would silently
+            # diverge from the eager path's.  Streaming backpressure comes
+            # from the admission window + the bounded prefetch queue instead.
+            raise ValueError(
+                "output_capacity is an eager-path knob; the streaming "
+                "executor's backpressure is lookahead + prefetch depth"
+            )
+        self.window: AdmissionWindow | None = None
+        self._closed_window_stats: list[WindowStats] = []
+        # step()/checkpoint()/audit() are serialized so a checkpoint taken
+        # from the trainer thread while a prefetch producer thread is inside
+        # a protocol round snapshots a step boundary, never a torn mid-round
+        # state (the resume guarantee depends on this).
+        self._lock = threading.RLock()
+        self.runner = EpochRunner(
+            self._make_engine,
+            n,
+            config,
+            world_size=world_size,
+            max_logical_iterations=max_logical_iterations,
+            incremental=True,
+        )
+
+    # -- iteration factory -----------------------------------------------------
+    def _make_window(self, iteration: int) -> AdmissionWindow:
+        return AdmissionWindow(
+            self.records,
+            self.policy,
+            self.spec,
+            shuffle_epoch=iteration_shuffle_epoch(self.epoch, iteration),
+            pipeline_epoch=self.epoch,
+            lookahead=self.lookahead,
+            view_id_base=iteration * ITERATION_VIEW_ID_STRIDE,
+        )
+
+    def _make_engine(self, iteration: int) -> OdbProtocolEngine:
+        if self.window is not None:
+            self._closed_window_stats.append(self.window.stats)
+        self.window = self._make_window(iteration)
+        return self._build_engine(self.window)
+
+    def _build_engine(self, window: AdmissionWindow) -> OdbProtocolEngine:
+        # A lookahead tighter than the depth envelope throttles fetches to
+        # O(lookahead/W) views per rank per round, so the Theorem-4 guard
+        # widens from q + O(D) to q + O(D) + O(M) — still a hard finite
+        # envelope, just sized for the throttled regime.
+        return OdbProtocolEngine(
+            [[] for _ in range(self.spec.world_size)],
+            self.config,
+            source=window,
+            quota_hint=self.spec.per_rank_quota,
+            round_margin=64 + self.spec.total_views,
+        )
+
+    # -- trainer-facing surface ------------------------------------------------
+    def step(self) -> list[Group | None] | None:
+        with self._lock:
+            return self.runner.step()
+
+    def steps(self) -> Iterator[list[Group | None]]:
+        while True:
+            s = self.step()
+            if s is None:
+                return
+            yield s
+
+    @property
+    def done(self) -> bool:
+        return self.runner.done
+
+    def requeue(self, steps) -> None:
+        """Roll staged-but-unconsumed steps back (prefetch abandonment)."""
+        with self._lock:
+            self.runner.requeue(steps)
+
+    def audit(self) -> EpochAudit:
+        with self._lock:
+            return self.runner.audit()
+
+    def window_stats(self) -> WindowStats:
+        """Aggregate admission stats across all iterations so far."""
+        agg = WindowStats()
+        windows = list(self._closed_window_stats)
+        if self.window is not None:
+            windows.append(self.window.stats)
+        for st in windows:
+            agg.realized += st.realized
+            agg.delivered += st.delivered
+            agg.refusals += st.refusals
+            agg.peak_resident = max(agg.peak_resident, st.peak_resident)
+        return agg
+
+    # -- checkpoint / resume ---------------------------------------------------
+    def checkpoint(self) -> StreamCheckpoint:
+        """Snapshot the executor between two ``step()`` calls.
+
+        Thread-safe: the snapshot is taken under the executor lock, so with a
+        prefetch producer running it lands exactly on a step boundary (the
+        producer-side frontier)."""
+        with self._lock:
+            return self._checkpoint_locked()
+
+    def _checkpoint_locked(self) -> StreamCheckpoint:
+        runner = self.runner
+        engine = runner.engine
+        payload = {
+            "version": STATE_VERSION,
+            "seed": self.seed,
+            "epoch": self.epoch,
+            "world_size": self.spec.world_size,
+            "dataset_identities": self.spec.dataset_size,
+            "lookahead": self.lookahead,
+            "max_logical_iterations": self.max_logical_iterations,
+            "config": dataclasses.asdict(self.config),
+            "policy_key": self.policy.cache_key("stream"),
+            "num_records": len(self.records),
+            "runner": {
+                "iteration": runner.iteration,
+                "emitted_total": runner.emitted_total,
+                "emitted_ids": sorted(runner.emitted_ids),
+                "rounds": runner.rounds,
+                "abandoned": list(runner.abandoned),
+                "steps_delivered": runner.steps_delivered,
+                "terminated_by": runner.terminated_by,
+                "done": runner.done,
+                "iteration_open": runner._iteration_open,
+                "iter_rounds": runner._iter_rounds,
+                "ready": [step_to_json(s) for s in runner._ready],
+            },
+            "engine": None
+            if engine is None
+            else {
+                "round_index": engine._round_index,
+                "ranks": [rank_state_dict(r) for r in engine.ranks],
+            },
+            "window": None
+            if engine is None or self.window is None
+            else self.window.state_dict(),
+            # A window whose iteration just finished (engine dropped) isn't
+            # serialized above; fold its stats in so resumed-run metrics
+            # still aggregate the whole epoch.
+            "closed_window_stats": [
+                st.as_dict() for st in self._closed_window_stats
+            ]
+            + (
+                [self.window.stats.as_dict()]
+                if engine is None and self.window is not None
+                else []
+            ),
+        }
+        return StreamCheckpoint(payload)
+
+    @classmethod
+    def resume(
+        cls,
+        checkpoint: StreamCheckpoint,
+        records: list[RawRecord],
+        policy: PipelinePolicy,
+    ) -> "StreamExecutor":
+        """Rebuild an executor that continues the checkpointed step sequence.
+
+        ``records``/``policy`` are re-supplied by the caller (they are data,
+        not state); the policy fingerprint is verified so a silently changed
+        transform policy — which would drift realized lengths and break
+        exact-identity coverage — fails loudly instead.
+        """
+        p = checkpoint.payload
+        if policy.cache_key("stream") != p["policy_key"]:
+            raise ValueError(
+                "pipeline policy mismatch: checkpointed lengths were realized "
+                "under a different transform policy"
+            )
+        if len(records) != p["num_records"]:
+            raise ValueError(
+                f"record count mismatch: {len(records)} != {p['num_records']}"
+            )
+        ex = cls(
+            records,
+            policy,
+            p["world_size"],
+            OdbConfig(**p["config"]),
+            seed=p["seed"],
+            epoch=p["epoch"],
+            lookahead=p["lookahead"],
+            max_logical_iterations=p["max_logical_iterations"],
+            dataset_identities=p["dataset_identities"],
+        )
+        rs = p["runner"]
+        runner = ex.runner
+        runner.iteration = rs["iteration"]
+        runner.emitted_total = rs["emitted_total"]
+        runner.emitted_ids = set(rs["emitted_ids"])
+        runner.rounds = rs["rounds"]
+        runner.abandoned = list(rs["abandoned"])
+        runner.steps_delivered = rs["steps_delivered"]
+        runner.terminated_by = rs["terminated_by"]
+        runner._done = rs["done"]
+        runner._iteration_open = rs["iteration_open"]
+        runner._iter_rounds = rs["iter_rounds"]
+        runner._ready = collections.deque(
+            step_from_json(s) for s in rs["ready"]
+        )
+        ex._closed_window_stats = [
+            WindowStats(**st) for st in p.get("closed_window_stats", [])
+        ]
+        if p["engine"] is not None:
+            window = ex._make_window(rs["iteration"])
+            window.load_state_dict(p["window"])
+            ex.window = window
+            engine = ex._build_engine(window)
+            for rank, st in zip(engine.ranks, p["engine"]["ranks"]):
+                load_rank_state(rank, st)
+            engine._round_index = p["engine"]["round_index"]
+            runner._engine = engine
+        return ex

@@ -1,0 +1,166 @@
+"""Background-thread prefetcher with bounded-queue backpressure (DESIGN.md §9.3).
+
+Overlaps the data-side work of the streaming path — pipeline realization,
+grouping, alignment rounds, bucket padding — with the consumer's jitted train
+step.  A producer thread drains the step iterator into a bounded
+``queue.Queue``; ``put`` blocks when the consumer falls behind (backpressure:
+the producer can never run more than ``depth`` steps ahead, which also caps
+host memory for staged batches), and ``get`` blocks when the producer is
+behind (a *miss*, i.e. the train step would have stalled on data anyway).
+
+The hit/miss split is the prefetcher's figure of merit: a hit means the next
+batch was already staged when the consumer asked — at steady state with
+compute-bound steps, the hit rate should approach 1.0 (benchmarks/streaming.py
+records it).
+
+Threading notes: producer exceptions are captured and re-raised in the
+consumer thread at the position they occurred; ``close()`` stops the producer
+promptly even when it is blocked on a full queue.  The GIL makes the
+protocol/bookkeeping overlap cooperative rather than parallel on pure-Python
+stages, but pipeline realization + numpy padding release the GIL enough for
+real overlap; multi-process workers are the roadmap follow-on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Generic, Iterable, Iterator, TypeVar
+
+T = TypeVar("T")
+
+_END = object()
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    produced: int = 0  # items the producer finished staging
+    consumed: int = 0  # items delivered to the consumer
+    hits: int = 0  # get() satisfied without blocking
+    misses: int = 0  # consumer had to wait on the producer
+    wait_s: float = 0.0  # total consumer stall time
+    produce_s: float = 0.0  # total producer-side staging time
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        return d
+
+
+class PrefetchIterator(Generic[T]):
+    """Iterate ``source`` through a ``depth``-bounded background queue."""
+
+    def __init__(self, source: Iterable[T], *, depth: int = 2) -> None:
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self.depth = depth
+        self.stats = PrefetchStats()
+        self._queue: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._finished = False  # _END consumed, error raised, or closed
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(
+            target=self._produce, args=(iter(source),), daemon=True
+        )
+        self._thread.start()
+
+    # -- producer side ---------------------------------------------------------
+    def _put(self, item) -> bool:
+        """Blocking put that still honours close(); False = stopped."""
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _produce(self, it: Iterator[T]) -> None:
+        try:
+            while not self._stop.is_set():
+                t0 = time.perf_counter()
+                try:
+                    item = next(it)
+                except StopIteration:
+                    break
+                self.stats.produce_s += time.perf_counter() - t0
+                if not self._put(item):
+                    return
+                self.stats.produced += 1
+        except BaseException as exc:  # surfaced on the consumer side
+            self._error = exc
+        self._put(_END)
+
+    # -- consumer side ---------------------------------------------------------
+    def __iter__(self) -> Iterator[T]:
+        return self
+
+    def __next__(self) -> T:
+        if self._finished:
+            raise StopIteration
+        try:
+            item = self._queue.get_nowait()
+            hit = True
+        except queue.Empty:
+            hit = False
+            t0 = time.perf_counter()
+            while True:
+                try:
+                    item = self._queue.get(timeout=0.1)
+                    break
+                except queue.Empty:
+                    # Producer dead with nothing queued (e.g. close() drained
+                    # the sentinel): the stream is over, don't block forever.
+                    if self._finished or not self._thread.is_alive():
+                        self._finished = True
+                        raise StopIteration from None
+            self.stats.wait_s += time.perf_counter() - t0
+        if item is _END:
+            # The terminal sentinel is not a data request; don't score it.
+            self._finished = True
+            self._thread.join(timeout=5.0)
+            if self._error is not None:
+                raise self._error
+            raise StopIteration
+        if hit:
+            self.stats.hits += 1
+        else:
+            self.stats.misses += 1
+        self.stats.consumed += 1
+        return item
+
+    def close(self, timeout: float | None = None) -> None:
+        """Stop the producer and discard staged items (consumer gave up).
+
+        Blocks until the producer thread exits (its current `next(source)`
+        finishes; protocol termination envelopes bound that).  Callers that
+        perform post-close rollback of staged work depend on the producer
+        being genuinely stopped — pass a ``timeout`` only if a wedged
+        producer is preferable to waiting, and check :meth:`producer_alive`
+        afterwards.
+        """
+        self._stop.set()
+        try:
+            while True:
+                self._queue.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=timeout)
+        self._finished = True
+
+    @property
+    def producer_alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def __enter__(self) -> "PrefetchIterator[T]":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

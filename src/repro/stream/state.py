@@ -1,0 +1,141 @@
+"""Resumable loader/scheduler state (DESIGN.md §9.4).
+
+A mid-epoch checkpoint of the streaming executor captures, layer by layer:
+
+  * epoch-level accounting — iteration index, cumulative emit counts, the
+    emitted-identity set (what Theorem 1's coverage audit is computed from),
+    steps delivered so far;
+  * the admission window — global cursor, staged-but-undelivered views,
+    per-rank delivery counts (the shuffle order itself regenerates
+    deterministically from (seed, epoch, iteration));
+  * per-rank protocol residuals — the (R, Q, B) pools, the emitted ledger,
+    output queues, counters and local-finish flags;
+  * engine round index, so Round records of a resumed run continue numbering.
+
+Everything is JSON-serializable: samples flatten to ``[view_id, identity,
+length]`` triples, groups to lists of triples, IDLE to ``null``.  Restoring
+and continuing yields the *identical* step sequence the uninterrupted run
+would have produced, so identity coverage (Theorem 1) is preserved across a
+checkpoint/resume boundary — proven by tests/test_stream.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+from repro.core.grouping import Group, Sample
+from repro.core.protocol import IDLE, OdbConfig, RankCounters, RankRuntime
+
+STATE_VERSION = 1
+
+
+# -- sample / group / step codecs ---------------------------------------------
+
+
+def sample_to_json(sample: Sample) -> list:
+    return [sample.view_id, sample.identity, sample.length]
+
+
+def sample_from_json(data: list) -> Sample:
+    return Sample(view_id=data[0], identity=data[1], length=data[2])
+
+
+def group_to_json(group: Group | None) -> list | None:
+    if group is IDLE or group is None:
+        return None
+    return [sample_to_json(s) for s in group.samples]
+
+
+def group_from_json(data: list | None) -> Group | None:
+    if data is None:
+        return IDLE
+    return Group(samples=tuple(sample_from_json(s) for s in data))
+
+
+def step_to_json(step: list[Group | None]) -> list:
+    return [group_to_json(g) for g in step]
+
+
+def step_from_json(data: list) -> list[Group | None]:
+    return [group_from_json(g) for g in data]
+
+
+# -- per-rank protocol residuals ----------------------------------------------
+
+
+def rank_state_dict(rank: RankRuntime) -> dict:
+    return {
+        "pending": [sample_to_json(s) for s in rank.pending],
+        "worker_queue": [sample_to_json(s) for s in rank.worker_queue],
+        "buffer": [sample_to_json(s) for s in rank.buffer],
+        "emitted": [sample_to_json(s) for s in rank.emitted],
+        "out_queue": [group_to_json(g) for g in rank.out_queue],
+        "counters": dataclasses.asdict(rank.counters),
+        "local_finished": rank.local_finished,
+        "admitted": rank.admitted,
+        "drain_rate": rank.drain_rate,
+    }
+
+
+def load_rank_state(rank: RankRuntime, state: dict) -> None:
+    rank.pending.clear()
+    rank.pending.extend(sample_from_json(s) for s in state["pending"])
+    rank.worker_queue.clear()
+    rank.worker_queue.extend(sample_from_json(s) for s in state["worker_queue"])
+    rank.buffer = [sample_from_json(s) for s in state["buffer"]]
+    rank.emitted = [sample_from_json(s) for s in state["emitted"]]
+    rank.out_queue.clear()
+    rank.out_queue.extend(group_from_json(g) for g in state["out_queue"])
+    rank.counters = RankCounters(**state["counters"])
+    rank.local_finished = state["local_finished"]
+    rank.admitted = state["admitted"]
+    rank.drain_rate = state["drain_rate"]
+
+
+# -- the checkpoint -----------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamCheckpoint:
+    """One serializable snapshot of a :class:`StreamExecutor` between steps."""
+
+    payload: dict[str, Any]
+
+    @property
+    def step_index(self) -> int:
+        return self.payload["runner"]["steps_delivered"]
+
+    @property
+    def epoch(self) -> int:
+        return self.payload["epoch"]
+
+    def config(self) -> OdbConfig:
+        return OdbConfig(**self.payload["config"])
+
+    def to_json(self) -> str:
+        return json.dumps(self.payload)
+
+    @classmethod
+    def from_json(cls, text: str) -> "StreamCheckpoint":
+        payload = json.loads(text)
+        version = payload.get("version")
+        if version != STATE_VERSION:
+            raise ValueError(
+                f"unsupported stream checkpoint version {version!r} "
+                f"(expected {STATE_VERSION})"
+            )
+        return cls(payload)
+
+    def save(self, path: str) -> None:
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as fh:
+            fh.write(self.to_json())
+        os.replace(tmp, path)  # atomic publish, same as train/checkpoint.py
+
+    @classmethod
+    def load(cls, path: str) -> "StreamCheckpoint":
+        with open(path) as fh:
+            return cls.from_json(fh.read())

@@ -1,0 +1,177 @@
+"""Bounded-lookahead admission window (DESIGN.md §9.1).
+
+The paper's observability constraint: a sample's true cost (its realized
+token length) exists only *after* the online pipeline has run.  The offline
+loader sidesteps this by calling ``realize_lengths`` over the whole dataset
+before scheduling — exactly the length-cache regime ODB rules out.  The
+``AdmissionWindow`` restores the online causal order:
+
+  * the *shuffle order* is computed up front from identities alone (the
+    DistributedSampler never observes lengths, App. C.1), so the padded view
+    order of size ``M = W·ceil(N/W)`` is known without any pipeline work;
+  * lengths are realized through ``run_pipeline`` one view at a time, only
+    when the view is admitted into the window;
+  * at most ``lookahead`` realized-but-undelivered views are resident at any
+    instant — the engine pulls via the :class:`repro.core.protocol.ViewSource`
+    interface and realization never runs ahead of consumption by more than
+    the lookahead budget (backpressure by refusal, not by blocking).
+
+Determinism: given (records, policy, pipeline_epoch, spec, shuffle_epoch),
+admission order, view ids and realized lengths are identical to the offline
+``realize_lengths`` + ``shard_views`` pair — with ``lookahead >= M`` the
+downstream step schedule is bit-for-bit the eager one (tests/test_stream.py).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+from repro.core.grouping import Sample
+from repro.core.protocol import ViewSource
+from repro.data.pipeline import PipelinePolicy, RawRecord, run_pipeline
+from repro.data.sampler import SamplerSpec, global_view_order
+
+
+@dataclasses.dataclass
+class WindowStats:
+    """Observability of the admission window (drives tests + benchmarks)."""
+
+    realized: int = 0  # total views pushed through run_pipeline
+    delivered: int = 0  # total views handed to the engine
+    peak_resident: int = 0  # max realized-but-undelivered at any instant
+    refusals: int = 0  # take() calls throttled by the lookahead budget
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class AdmissionWindow(ViewSource):
+    """Incremental, lookahead-bounded realization of one logical iteration.
+
+    One window corresponds to one logical sampler iteration (one shuffled,
+    padded view order).  Ranks pull with ``take(rank, k)``; the window
+    advances a single global cursor through the order, realizing lengths and
+    distributing views to per-rank staging deques (stride-sharding:
+    ``rank = position % W``), while never holding more than ``lookahead``
+    realized-undelivered views.
+
+    ``lookahead`` must be at least ``world_size`` — below that, a full budget
+    can consist entirely of views staged for other ranks and the requesting
+    rank could starve for a round with nothing forcing progress.
+    """
+
+    def __init__(
+        self,
+        records: list[RawRecord],
+        policy: PipelinePolicy,
+        spec: SamplerSpec,
+        *,
+        shuffle_epoch: int,
+        pipeline_epoch: int = 0,
+        lookahead: int | None = None,
+        view_id_base: int = 0,
+    ) -> None:
+        if lookahead is None:
+            lookahead = spec.total_views
+        if lookahead < spec.world_size:
+            raise ValueError(
+                f"lookahead {lookahead} < world_size {spec.world_size}: "
+                "a full window could hold no view for the requesting rank"
+            )
+        self.records = records
+        self.policy = policy
+        self.spec = spec
+        self.shuffle_epoch = shuffle_epoch
+        self.pipeline_epoch = pipeline_epoch
+        self.lookahead = lookahead
+        self.view_id_base = view_id_base
+        self.order = global_view_order(spec, shuffle_epoch)  # identities only
+        self.cursor = 0
+        self.resident = 0
+        self.staged: list[collections.deque[Sample]] = [
+            collections.deque() for _ in range(spec.world_size)
+        ]
+        self.delivered_per_rank = [0] * spec.world_size
+        self.stats = WindowStats()
+
+    # -- admission -------------------------------------------------------------
+    def _admit_one(self) -> None:
+        identity = self.order[self.cursor]
+        length = run_pipeline(self.records[identity], self.policy, self.pipeline_epoch)
+        sample = Sample(
+            view_id=self.view_id_base + self.cursor,
+            identity=identity,
+            length=length,
+        )
+        self.staged[self.cursor % self.spec.world_size].append(sample)
+        self.cursor += 1
+        self.resident += 1
+        self.stats.realized += 1
+        self.stats.peak_resident = max(self.stats.peak_resident, self.resident)
+
+    # -- ViewSource interface --------------------------------------------------
+    def take(self, rank: int, k: int) -> list[Sample]:
+        dq = self.staged[rank]
+        throttled = False
+        while len(dq) < k and self.cursor < len(self.order):
+            if self.resident >= self.lookahead:
+                throttled = True
+                break
+            self._admit_one()
+        if throttled and len(dq) < k:
+            self.stats.refusals += 1
+        out: list[Sample] = []
+        while dq and len(out) < k:
+            out.append(dq.popleft())
+        self.resident -= len(out)
+        self.delivered_per_rank[rank] += len(out)
+        self.stats.delivered += len(out)
+        return out
+
+    def exhausted(self, rank: int) -> bool:
+        return self.cursor >= len(self.order) and not self.staged[rank]
+
+    def remaining(self, rank: int) -> int:
+        """Views not yet delivered to ``rank`` (staged + beyond the cursor).
+
+        Exact because the padded order has fixed per-rank quota
+        ``ceil(N/W)`` regardless of realized lengths.
+        """
+        return self.spec.per_rank_quota - self.delivered_per_rank[rank]
+
+    # -- checkpointing (stream/state.py) ---------------------------------------
+    def state_dict(self) -> dict:
+        """Serializable mid-iteration window state.
+
+        The shuffle order is NOT serialized — it regenerates deterministically
+        from (spec, shuffle_epoch).  Staged views are stored explicitly so a
+        resume is exact even though they could in principle be re-realized.
+        """
+        return {
+            "cursor": self.cursor,
+            "view_id_base": self.view_id_base,
+            "shuffle_epoch": self.shuffle_epoch,
+            "pipeline_epoch": self.pipeline_epoch,
+            "lookahead": self.lookahead,
+            "staged": [
+                [[s.view_id, s.identity, s.length] for s in dq]
+                for dq in self.staged
+            ],
+            "delivered_per_rank": list(self.delivered_per_rank),
+            "stats": self.stats.as_dict(),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.cursor = state["cursor"]
+        self.view_id_base = state["view_id_base"]
+        self.lookahead = state["lookahead"]
+        self.staged = [
+            collections.deque(
+                Sample(view_id=v, identity=i, length=ln) for v, i, ln in dq
+            )
+            for dq in state["staged"]
+        ]
+        self.resident = sum(len(dq) for dq in self.staged)
+        self.delivered_per_rank = list(state["delivered_per_rank"])
+        self.stats = WindowStats(**state["stats"])

@@ -78,6 +78,13 @@ class TrainerConfig:
     keep_checkpoints: int = 3
     log_every: int = 10
     max_steps: int | None = None
+    # Data path selection (DESIGN.md §9): the streaming executor admits views
+    # through a bounded-lookahead window and overlaps data-side work with the
+    # jitted step via a background prefetcher; eager is the offline reference.
+    streaming: bool = True
+    prefetch: bool = True
+    prefetch_depth: int = 2
+    lookahead: int | None = None
 
 
 class Trainer:
@@ -128,13 +135,24 @@ class Trainer:
             return state, step
         return self.init_state(rng), 0
 
+    def _epoch_steps(self, epoch: int):
+        """Pick the data path: streaming (default, overlapped) or eager."""
+        if self.cfg.streaming:
+            return self.loader.streaming_epoch(
+                epoch,
+                lookahead=self.cfg.lookahead,
+                prefetch=self.cfg.prefetch,
+                prefetch_depth=self.cfg.prefetch_depth,
+            )
+        return self.loader.epoch(epoch)
+
     def train_epoch(self, state: dict, epoch: int = 0, start_step: int = 0):
         if self._train_step is None:
             self._build_step()
         step_idx = start_step
         t0 = time.perf_counter()
         emitted = 0
-        for loader_step in self.loader.epoch(epoch):
+        for loader_step in self._epoch_steps(epoch):
             batch_np = global_batch_arrays(loader_step.batches)
             tokens = jnp.asarray(batch_np["tokens"])
             labels, mask = shift_labels(tokens, jnp.asarray(batch_np["loss_mask"]))

@@ -1,0 +1,366 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (satellite of PR 1).
+
+The container ships without the real ``hypothesis`` package, which made all
+six property-test modules fail at *collection* (the worst failure mode: the
+whole tier-1 run dies).  This shim implements exactly the API surface the
+test-suite uses — ``given``, ``settings``, and the ``integers`` / ``lists`` /
+``floats`` / ``booleans`` / ``composite`` strategies — driven by a seeded
+``random.Random`` so runs are reproducible.
+
+It is NOT hypothesis: no shrinking, no database, no health checks.  The first
+two examples of every ``@given`` use each strategy's min/max boundary values,
+the rest are uniform draws.  When the real package is installed (the ``dev``
+extra in pyproject.toml), ``tests/conftest.py`` leaves it alone and this
+module is inert.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import struct
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    """Base strategy: ``do_draw(rnd)`` plus optional boundary examples."""
+
+    def do_draw(self, rnd: random.Random):
+        raise NotImplementedError
+
+    def boundary(self, which: str):
+        """'min' / 'max' boundary example; None = no special boundary."""
+        return None
+
+    # hypothesis strategies expose .map/.filter; implement the tiny subset
+    # cheaply in case future tests use them.
+    def map(self, f):
+        return _MappedStrategy(self, f)
+
+    def example(self):  # debugging aid, mirrors hypothesis
+        return self.do_draw(random.Random(0))
+
+
+class _MappedStrategy(_Strategy):
+    def __init__(self, base, f):
+        self.base = base
+        self.f = f
+
+    def do_draw(self, rnd):
+        return self.f(self.base.do_draw(rnd))
+
+    def boundary(self, which):
+        b = self.base.boundary(which)
+        return None if b is None else self.f(b)
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.min_value = -(2**31) if min_value is None else min_value
+        self.max_value = 2**31 if max_value is None else max_value
+
+    def do_draw(self, rnd):
+        return rnd.randint(self.min_value, self.max_value)
+
+    def boundary(self, which):
+        return self.min_value if which == "min" else self.max_value
+
+
+class _Booleans(_Strategy):
+    def do_draw(self, rnd):
+        return rnd.random() < 0.5
+
+    def boundary(self, which):
+        return which == "max"
+
+
+class _Floats(_Strategy):
+    def __init__(
+        self,
+        min_value=0.0,
+        max_value=1.0,
+        *,
+        allow_nan=True,
+        allow_infinity=None,
+        width=64,
+    ):
+        self.min_value = float(min_value)
+        self.max_value = float(max_value)
+        self.width = width
+
+    def _cast(self, x: float) -> float:
+        if self.width == 32:  # round-trip through float32 precision
+            return struct.unpack("f", struct.pack("f", x))[0]
+        return x
+
+    def do_draw(self, rnd):
+        return self._cast(rnd.uniform(self.min_value, self.max_value))
+
+    def boundary(self, which):
+        return self._cast(self.min_value if which == "min" else self.max_value)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, *, min_size=0, max_size=None, unique=False):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = min_size + 20 if max_size is None else max_size
+        self.unique = unique
+
+    def do_draw(self, rnd):
+        size = rnd.randint(self.min_size, self.max_size)
+        out = []
+        seen = set()
+        attempts = 0
+        while len(out) < size and attempts < size * 20 + 20:
+            v = self.elements.do_draw(rnd)
+            attempts += 1
+            if self.unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+
+    def boundary(self, which):
+        if which == "min":
+            b = self.elements.boundary("min")
+            if b is None:
+                return None
+            return [b] * max(self.min_size, 1 if self.min_size else 0) or []
+        b = self.elements.boundary("max")
+        if b is None:
+            return None
+        return [b] * min(self.max_size, max(self.min_size, 3))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def do_draw(self, rnd):
+        return rnd.choice(self.options)
+
+    def boundary(self, which):
+        return self.options[0] if which == "min" else self.options[-1]
+
+
+class _Just(_Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def do_draw(self, rnd):
+        return self.value
+
+    def boundary(self, which):
+        return self.value
+
+
+class _Tuples(_Strategy):
+    def __init__(self, *parts):
+        self.parts = parts
+
+    def do_draw(self, rnd):
+        return tuple(p.do_draw(rnd) for p in self.parts)
+
+
+class _Composite(_Strategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+
+    def do_draw(self, rnd):
+        def draw(strategy):
+            return strategy.do_draw(rnd)
+
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+
+    return builder
+
+
+def integers(min_value=None, max_value=None):
+    return _Integers(min_value, max_value)
+
+
+def booleans():
+    return _Booleans()
+
+
+def floats(min_value=0.0, max_value=1.0, **kwargs):
+    return _Floats(min_value, max_value, **kwargs)
+
+
+def lists(elements, *, min_size=0, max_size=None, unique=False):
+    return _Lists(elements, min_size=min_size, max_size=max_size, unique=unique)
+
+
+def sampled_from(options):
+    return _SampledFrom(options)
+
+
+def just(value):
+    return _Just(value)
+
+
+def tuples(*parts):
+    return _Tuples(*parts)
+
+
+class settings:
+    """Decorator recording (max_examples, deadline); consumed by ``given``."""
+
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._compat_settings = self
+        return fn
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much, cls.data_too_large]
+
+
+class _Rejected(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Reject the current example when the assumption fails."""
+    if not condition:
+        raise _Rejected()
+    return True
+
+
+def given(*strategies, **kw_strategies):
+    def decorate(fn):
+        cfg = getattr(fn, "_compat_settings", None) or settings()
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):  # signature fixed up below for pytest
+            # Deterministic seed per test function so failures reproduce —
+            # crc32, not hash(): str hashing is salted per process.
+            name = getattr(fn, "__qualname__", fn.__name__)
+            seed_base = zlib.crc32(name.encode()) & 0x7FFFFFFF
+            executed = 0
+            example_index = 0
+            while executed < cfg.max_examples:
+                attempt = example_index  # boundary examples on attempts 0/1;
+                # a boundary rejected by assume() falls through to random
+                # draws instead of retrying the identical value forever.
+                rnd = random.Random(seed_base * 1_000_003 + example_index)
+                example_index += 1
+                if example_index > cfg.max_examples * 10 + 20:
+                    if executed == 0:
+                        raise AssertionError(
+                            "assume() rejected every generated example; "
+                            "property was never exercised (hypothesis would "
+                            "raise FailedHealthCheck.filter_too_much)"
+                        )
+                    break  # enough examples ran; assume() is just picky
+                try:
+                    if attempt == 0:
+                        drawn = [
+                            s.boundary("min")
+                            if s.boundary("min") is not None
+                            else s.do_draw(rnd)
+                            for s in strategies
+                        ]
+                        drawn_kw = {
+                            k: (
+                                s.boundary("min")
+                                if s.boundary("min") is not None
+                                else s.do_draw(rnd)
+                            )
+                            for k, s in kw_strategies.items()
+                        }
+                    elif attempt == 1:
+                        drawn = [
+                            s.boundary("max")
+                            if s.boundary("max") is not None
+                            else s.do_draw(rnd)
+                            for s in strategies
+                        ]
+                        drawn_kw = {
+                            k: (
+                                s.boundary("max")
+                                if s.boundary("max") is not None
+                                else s.do_draw(rnd)
+                            )
+                            for k, s in kw_strategies.items()
+                        }
+                    else:
+                        drawn = [s.do_draw(rnd) for s in strategies]
+                        drawn_kw = {
+                            k: s.do_draw(rnd) for k, s in kw_strategies.items()
+                        }
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except _Rejected:
+                    continue
+                except Exception as exc:
+                    raise AssertionError(
+                        f"property falsified on example {executed} "
+                        f"(seed={seed_base * 1_000_003 + example_index - 1}): "
+                        f"args={drawn!r} kwargs={drawn_kw!r}"
+                    ) from exc
+                executed += 1
+
+        # pytest must not see the strategy-filled parameters as fixtures:
+        # drop the __wrapped__ introspection link and narrow the visible
+        # signature to the parameters given() does NOT supply.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[: len(params) - len(strategies) - len(kw_strategies)]
+        keep = [p for p in keep if p.name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.example = lambda *a, **k: (lambda fn: fn)  # @example(...) no-op
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers",
+        "booleans",
+        "floats",
+        "lists",
+        "sampled_from",
+        "just",
+        "tuples",
+        "composite",
+    ):
+        setattr(strategies, name, globals()[name])
+    hyp.strategies = strategies
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,31 @@
+"""Test-session bootstrap: make ``hypothesis`` importable everywhere.
+
+When the real hypothesis package is present (the ``[dev]`` extra) it is used
+untouched; otherwise the deterministic mini-implementation in
+``_hypothesis_compat.py`` is registered so the property-test modules collect
+and run instead of killing the whole tier-1 session with collection errors.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import sys
+
+
+def _ensure_hypothesis() -> None:
+    try:
+        import hypothesis  # noqa: F401
+
+        return
+    except ModuleNotFoundError:
+        pass
+    path = pathlib.Path(__file__).with_name("_hypothesis_compat.py")
+    spec = importlib.util.spec_from_file_location("_hypothesis_compat", path)
+    module = importlib.util.module_from_spec(spec)
+    sys.modules.setdefault("_hypothesis_compat", module)
+    spec.loader.exec_module(module)
+    module.install()
+
+
+_ensure_hypothesis()

@@ -1,0 +1,422 @@
+"""Streaming executor: eager equivalence, bounded admission, resume, prefetch.
+
+The three acceptance properties of the stream subsystem (DESIGN.md §9):
+
+  1. **Equivalence** — with lookahead >= M the streaming executor reproduces
+     the eager ``odb_schedule`` step sequence bit-for-bit, audit included;
+  2. **Bounded admission** — with lookahead = k, peak realized-lengths
+     resident in the window never exceeds k, while Theorem 1 coverage
+     (η_identity = 0) still holds;
+  3. **Resumability** — a checkpoint taken between any two steps, serialized
+     through JSON, resumes into the *identical* remaining step sequence, so
+     exact-identity coverage survives mid-epoch preemption.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import IDLE, OdbConfig
+from repro.data.datasets import _records_from_lengths
+from repro.data.loader import OnlineDynamicLoader, odb_schedule
+from repro.data.pipeline import PipelinePolicy, realize_lengths
+from repro.stream import (
+    AdmissionWindow,
+    PrefetchIterator,
+    StreamCheckpoint,
+    StreamExecutor,
+)
+
+
+def test_stream_package_imports_standalone():
+    """repro.stream must be importable as the FIRST repro import (a resume
+    tool starts from StreamCheckpoint.load, not from repro.data)."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.stream import StreamExecutor, StreamCheckpoint"],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+
+
+def make_records(n: int, seed: int = 0, lo: int = 16, hi: int = 900):
+    rng = random.Random(seed)
+    return _records_from_lengths([rng.randint(lo, hi) for _ in range(n)])
+
+
+def small_cfg(join_mode: bool = True, **kw) -> OdbConfig:
+    base = dict(
+        l_max=1024, buffer_size=16, prefetch_factor=8, num_workers=1,
+        join_mode=join_mode,
+    )
+    base.update(kw)
+    return OdbConfig(**base)
+
+
+POLICY = PipelinePolicy()
+
+
+class TestEagerEquivalence:
+    @pytest.mark.parametrize(
+        "n,world,seed,epoch",
+        [(40, 1, 0, 0), (150, 4, 3, 2), (97, 3, 7, 0), (64, 8, 1, 1)],
+    )
+    def test_full_lookahead_bitwise(self, n, world, seed, epoch):
+        records = make_records(n, seed)
+        lengths = realize_lengths(records, POLICY, epoch)
+        cfg = small_cfg()
+        steps, audit = odb_schedule(lengths, world, cfg, seed=seed, epoch=epoch)
+        ex = StreamExecutor(records, POLICY, world, cfg, seed=seed, epoch=epoch)
+        assert list(ex.steps()) == steps  # Group/Sample are frozen: deep ==
+        assert ex.audit() == audit
+
+    def test_nonjoin_step_sequence(self):
+        records = make_records(140, 11)
+        lengths = realize_lengths(records, POLICY, 0)
+        cfg = small_cfg(join_mode=False)
+        steps, audit = odb_schedule(lengths, 4, cfg, seed=5)
+        ex = StreamExecutor(records, POLICY, 4, cfg, seed=5)
+        assert list(ex.steps()) == steps
+        a = ex.audit()
+        assert a.emitted_views == audit.emitted_views
+        assert a.emitted_identities == audit.emitted_identities
+        assert a.logical_iterations == audit.logical_iterations
+
+    def test_incremental_delivery_starts_before_epoch_rounds_finish(self):
+        """The first step must appear with only O(window) views realized."""
+        records = make_records(400, 2)
+        ex = StreamExecutor(records, POLICY, 4, small_cfg(), seed=1, lookahead=64)
+        first = ex.step()
+        assert first is not None
+        stats = ex.window_stats()
+        assert stats.realized < len(records)  # epoch NOT fully realized
+
+
+class TestBoundedAdmission:
+    @pytest.mark.parametrize("lookahead", [4, 10, 32])
+    def test_peak_resident_within_lookahead(self, lookahead):
+        records = make_records(200, 9)
+        cfg = small_cfg()
+        ex = StreamExecutor(
+            records, POLICY, 4, cfg, seed=2, lookahead=lookahead
+        )
+        steps = list(ex.steps())
+        stats = ex.window_stats()
+        assert stats.peak_resident <= lookahead
+        assert stats.peak_resident < len(records)
+        # Theorem 1 under throttled admission: strict identity coverage.
+        audit = ex.audit()
+        assert audit.eta_identity == 0.0
+        assert audit.emitted_views == audit.sampler_views  # full multiset M
+        assert all(len(s) == 4 for s in steps)
+
+    def test_lookahead_below_world_rejected(self):
+        records = make_records(20, 0)
+        with pytest.raises(ValueError):
+            StreamExecutor(records, POLICY, 4, small_cfg(), lookahead=3)
+
+    def test_output_capacity_rejected(self):
+        # Incremental draining would make the C_r envelope a silent no-op
+        # (schedule divergence from eager); refuse it loudly instead.
+        records = make_records(20, 0)
+        with pytest.raises(ValueError, match="output_capacity"):
+            StreamExecutor(records, POLICY, 2, small_cfg(output_capacity=4))
+
+    def test_window_delivers_sampler_order(self):
+        from repro.data.sampler import SamplerSpec, shard_views
+
+        records = make_records(50, 4)
+        lengths = realize_lengths(records, POLICY, 0)
+        spec = SamplerSpec(dataset_size=50, world_size=3, seed=4)
+        expected = shard_views(spec, 17, lengths)
+        window = AdmissionWindow(
+            records, POLICY, spec, shuffle_epoch=17, lookahead=1000
+        )
+        got = [[] for _ in range(3)]
+        while not all(window.exhausted(r) for r in range(3)):
+            for r in range(3):
+                got[r].extend(window.take(r, 7))
+        assert got == expected
+
+
+class TestResume:
+    @pytest.mark.parametrize(
+        "lookahead,cut", [(None, 1), (None, 7), (12, 1), (12, 23)]
+    )
+    def test_checkpoint_resume_identical_sequence(self, lookahead, cut):
+        records = make_records(140, 11)
+        cfg = small_cfg()
+        reference = StreamExecutor(
+            records, POLICY, 4, cfg, seed=5, epoch=1, lookahead=lookahead
+        )
+        full = list(reference.steps())
+
+        ex = StreamExecutor(
+            records, POLICY, 4, cfg, seed=5, epoch=1, lookahead=lookahead
+        )
+        head = [ex.step() for _ in range(cut)]
+        assert all(s is not None for s in head)
+        blob = ex.checkpoint().to_json()  # JSON round-trip, as a real job would
+        resumed = StreamExecutor.resume(
+            StreamCheckpoint.from_json(blob), records, POLICY
+        )
+        tail = list(resumed.steps())
+        assert head + tail == full
+        # Theorem 1 across the preemption boundary: exact identity coverage.
+        audit = resumed.audit()
+        assert audit.eta_identity == 0.0
+        assert audit.emitted_views == audit.sampler_views
+        assert audit == reference.audit()
+
+    def test_resume_rejects_changed_policy(self):
+        records = make_records(40, 3)
+        ex = StreamExecutor(records, POLICY, 2, small_cfg(), seed=1)
+        ex.step()
+        ck = ex.checkpoint()
+        drifted = PipelinePolicy(chars_per_token=4.2)
+        with pytest.raises(ValueError, match="policy"):
+            StreamExecutor.resume(ck, records, drifted)
+
+    def test_resume_rejects_wrong_version(self):
+        records = make_records(20, 3)
+        ex = StreamExecutor(records, POLICY, 2, small_cfg(), seed=1)
+        payload = ex.checkpoint().payload
+        payload["version"] = 999
+        import json
+
+        with pytest.raises(ValueError, match="version"):
+            StreamCheckpoint.from_json(json.dumps(payload))
+
+
+class TestPrefetch:
+    def test_order_and_completeness(self):
+        src = list(range(57))
+        with PrefetchIterator(iter(src), depth=3) as it:
+            assert list(it) == src
+        assert it.stats.consumed == 57
+        assert it.stats.produced == 57
+
+    def test_backpressure_bounds_producer(self):
+        produced = []
+
+        def gen():
+            for i in range(100):
+                produced.append(i)
+                yield i
+
+        depth = 2
+        it = PrefetchIterator(gen(), depth=depth)
+        try:
+            got = []
+            for _ in range(5):
+                got.append(next(it))
+                time.sleep(0.05)  # slow consumer; producer must be throttled
+                # bounded queue: consumed + staged (depth) + one in flight
+                assert len(produced) <= len(got) + depth + 1
+            assert got == list(range(5))
+        finally:
+            it.close()
+
+    def test_producer_error_propagates(self):
+        def gen():
+            yield 1
+            yield 2
+            raise RuntimeError("pipeline exploded")
+
+        with PrefetchIterator(gen(), depth=2) as it:
+            assert next(it) == 1
+            assert next(it) == 2
+            with pytest.raises(RuntimeError, match="pipeline exploded"):
+                next(it)
+
+    def test_close_unblocks_full_queue(self):
+        def gen():
+            i = 0
+            while True:
+                yield i
+                i += 1
+
+        it = PrefetchIterator(gen(), depth=1)
+        assert next(it) == 0
+        it.close()
+        assert not it.producer_alive
+
+    def test_next_after_close_raises_stopiteration(self):
+        it = PrefetchIterator(iter(range(10)), depth=2)
+        assert next(it) == 0
+        it.close()
+        with pytest.raises(StopIteration):
+            next(it)  # must not hang on an empty queue with a dead producer
+
+    def test_next_after_exhaustion_keeps_raising(self):
+        it = PrefetchIterator(iter([1]), depth=2)
+        assert list(it) == [1]
+        with pytest.raises(StopIteration):
+            next(it)
+
+
+def _loader(world=2, **cfg_kw) -> OnlineDynamicLoader:
+    from repro.data.datasets import DatasetSpec
+
+    records = make_records(90, 21, lo=16, hi=700)
+    spec = DatasetSpec(
+        name="stream-test",
+        size=len(records),
+        policy=PipelinePolicy(cutoff_len=2048),
+        make_records=lambda size, seed: records[:size],
+    )
+    return OnlineDynamicLoader(
+        spec, world, small_cfg(**cfg_kw), seed=3, vocab_size=512
+    )
+
+
+class TestLoaderIntegration:
+    @pytest.mark.parametrize("prefetch", [False, True])
+    def test_streaming_epoch_matches_eager_epoch(self, prefetch):
+        eager = list(_loader().epoch(epoch=0))
+        stream = list(
+            _loader().streaming_epoch(epoch=0, prefetch=prefetch)
+        )
+        assert len(eager) == len(stream)
+        for a, b in zip(eager, stream):
+            assert a.metadata == b.metadata
+            for ba, bb in zip(a.batches, b.batches):
+                np.testing.assert_array_equal(ba.tokens, bb.tokens)
+                np.testing.assert_array_equal(ba.loss_mask, bb.loss_mask)
+
+    def test_streaming_epoch_publishes_audit_and_stats(self):
+        loader = _loader()
+        steps = list(loader.streaming_epoch(epoch=0, prefetch=True))
+        assert steps
+        assert loader.last_audit is not None
+        assert loader.last_audit.eta_identity == 0.0
+        assert loader.last_prefetch_stats is not None
+        assert loader.last_prefetch_stats.consumed == len(steps)
+
+    def test_finalize_audit_opt_out_skips_drain(self):
+        loader = _loader()
+        it = loader.streaming_epoch(epoch=0, finalize_audit=False)
+        for _ in range(3):
+            next(it)
+        it.close()
+        # Audit reflects only the delivered prefix; no full-epoch drain ran.
+        assert loader.last_audit is not None
+        assert not loader.last_executor.done
+        assert loader.last_audit.emitted_views < loader.last_audit.sampler_views
+
+        loader2 = _loader()
+        it2 = loader2.streaming_epoch(epoch=0)  # default: drain on close
+        for _ in range(3):
+            next(it2)
+        it2.close()
+        assert loader2.last_audit.eta_identity == 0.0
+        assert loader2.last_audit.emitted_views == loader2.last_audit.sampler_views
+
+    def test_requeued_quota_crossing_step_counts_one_iteration(self):
+        """Redelivering a rolled-back quota-crossing step must not close the
+        logical iteration twice (Theorem-2 audit regression)."""
+        records = make_records(80, 17)
+        cfg = small_cfg(join_mode=False)
+        reference = StreamExecutor(records, POLICY, 2, cfg, seed=4)
+        list(reference.steps())
+
+        ex = StreamExecutor(records, POLICY, 2, cfg, seed=4)
+        steps = list(ex.steps())
+        ex.requeue(steps[-2:])  # prefetch-abandonment rollback of the tail
+        redelivered = list(ex.steps())
+        assert redelivered == steps[-2:]
+        assert ex.audit() == reference.audit()
+
+    def test_resume_preserves_window_stats_aggregate(self):
+        records = make_records(120, 13)
+        cfg = small_cfg(join_mode=False)
+        ex = StreamExecutor(records, POLICY, 4, cfg, seed=2, lookahead=16)
+        full = list(ex.steps())
+        assert full
+        reference = ex.window_stats()
+
+        ex2 = StreamExecutor(records, POLICY, 4, cfg, seed=2, lookahead=16)
+        for _ in range(5):
+            ex2.step()
+        resumed = StreamExecutor.resume(ex2.checkpoint(), records, POLICY)
+        list(resumed.steps())
+        got = resumed.window_stats()
+        assert got.realized == reference.realized
+        assert got.delivered == reference.delivered
+
+    def test_prefetch_close_rolls_back_staged_tail(self):
+        """Close-then-checkpoint under prefetch must resume exactly at the
+        consumer's frontier: the staged-but-unconsumed tail is rolled back,
+        so no sample is skipped (coverage) or replayed (duplication)."""
+        def fresh():
+            return _loader()
+
+        loader = fresh()
+        it = loader.streaming_epoch(
+            0, lookahead=16, prefetch=True, prefetch_depth=4,
+            finalize_audit=False,
+        )
+        head = [next(it) for _ in range(3)]
+        it.close()  # rollback happens here
+        ck = loader.last_executor.checkpoint()
+
+        resumed_loader = fresh()
+        tail = list(resumed_loader.streaming_epoch(0, resume_from=ck))
+        full = list(fresh().streaming_epoch(0, lookahead=16))
+        assert len(head) + len(tail) == len(full)
+        for a, b in zip(head + tail, full):
+            assert a.metadata.samples_per_rank == b.metadata.samples_per_rank
+            assert a.metadata.tokens_per_rank == b.metadata.tokens_per_rank
+        assert resumed_loader.last_audit.eta_identity == 0.0
+
+    def test_accounting_counts_only_consumed_steps(self):
+        loader = _loader()
+        it = loader.streaming_epoch(
+            0, prefetch=True, prefetch_depth=4, finalize_audit=False
+        )
+        for _ in range(3):
+            next(it)
+        it.close()
+        # The producer padded ahead, but only consumed steps are accounted.
+        assert loader.accounting.steps == 3
+
+    def test_resume_rejects_mismatched_arguments(self):
+        loader = _loader()
+        it = loader.streaming_epoch(0, lookahead=16)
+        next(it)
+        ck = loader.last_executor.checkpoint()
+        it.close()
+        with pytest.raises(ValueError, match="lookahead"):
+            next(_loader().streaming_epoch(0, lookahead=32, resume_from=ck))
+        with pytest.raises(ValueError, match="epoch"):
+            next(_loader().streaming_epoch(5, resume_from=ck))
+
+    def test_mid_epoch_checkpoint_through_loader(self):
+        loader = _loader()
+        it = loader.streaming_epoch(epoch=0, lookahead=16)
+        head = [next(it) for _ in range(4)]
+        ck = loader.last_executor.checkpoint()
+        it.close()
+
+        resumed_loader = _loader()
+        tail = list(
+            resumed_loader.streaming_epoch(epoch=0, resume_from=ck)
+        )
+        full = list(_loader().streaming_epoch(epoch=0, lookahead=16))
+        assert len(head) + len(tail) == len(full)
+        for a, b in zip(head + tail, full):
+            assert a.metadata == b.metadata
