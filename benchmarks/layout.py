@@ -1,0 +1,176 @@
+"""Measured padded-vs-packed layout benchmark (BENCH_layout.json).
+
+Unlike the cost-model throughput tables, everything here is *measured* on
+this host: the real loader path builds real DeviceBatches through each
+:class:`~repro.core.layout.BatchLayout`, and a real jitted train step (the
+same ``make_train_step`` the deployment trainer uses, smoke-scale model)
+executes every step on CPU.  Reported per (length profile × layout):
+
+  * ``device_padding_fraction`` — 1 - real/occupied token slots actually
+    shipped to device (the quantity the layout choice moves);
+  * ``steps_per_s`` / ``tok_per_s`` — measured over the timed pass, with one
+    warmup call per distinct global batch shape so XLA compiles are excluded
+    (the bucket grids bound the shape census — also reported);
+  * accounting totals (steps, real/device tokens, distinct shapes).
+
+Profiles: ``longtail`` (high-CV — the acceptance profile: packed device-side
+padding must sit strictly below dense) and ``uniform_narrow`` (low-CV
+control).  Artifacts: ``<out>/layout.json`` + top-level ``BENCH_layout.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+from benchmarks.common import csv_line
+from repro.core import OdbConfig
+from repro.data import OnlineDynamicLoader, get_dataset, length_cv
+
+PROFILES = ("longtail", "uniform_narrow")
+HIGH_CV_PROFILE = "longtail"
+
+
+def bench_layout(
+    profile: str,
+    layout: str,
+    *,
+    data_scale: float,
+    world: int,
+    l_max: int,
+    max_steps: int,
+    vocab: int = 512,
+    seed: int = 0,
+) -> dict:
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import LM
+    from repro.train.optimizer import OptimizerConfig, init_opt_state
+    from repro.train.trainer import assemble_model_batch, make_train_step
+
+    ds = get_dataset(profile, scale=data_scale)
+    loader = OnlineDynamicLoader(
+        ds,
+        world_size=world,
+        config=OdbConfig(
+            l_max=l_max, buffer_size=64, prefetch_factor=32, num_workers=2
+        ),
+        layout=layout,
+        seed=seed,
+        vocab_size=vocab,
+    )
+    steps = []
+    for ls in loader.epoch(0):
+        steps.append(ls)
+        if len(steps) >= max_steps:
+            break
+
+    cfg = dataclasses.replace(get_smoke_config("qwen3_0_6b"), vocab_size=vocab)
+    model = LM(cfg)
+    opt_cfg = OptimizerConfig(total_steps=100)
+    train_step = jax.jit(make_train_step(model, opt_cfg))
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+    batches = [assemble_model_batch(ls, loader.layout) for ls in steps]
+    # Warmup: one call per distinct global shape (excludes XLA compiles from
+    # the timed pass; the shape census itself is a figure of merit).
+    shapes = {}
+    for b in batches:
+        shapes.setdefault(b["tokens"].shape, b)
+    for b in shapes.values():
+        s2, _ = train_step(state, b)
+        jax.block_until_ready(s2["params"])
+
+    t0 = time.perf_counter()
+    metrics = None
+    for b in batches:
+        state, metrics = train_step(state, b)
+    jax.block_until_ready(state["params"])
+    wall = time.perf_counter() - t0
+
+    acc = loader.accounting
+    return {
+        "profile": profile,
+        "layout": layout,
+        "length_cv": round(length_cv(ds.lengths(seed)), 4),
+        "steps": len(steps),
+        "real_tokens": acc.emitted_tokens,
+        "device_tokens": acc.device_tokens,
+        "device_padding_fraction": acc.device_padding_fraction,
+        "group_padding_fraction": acc.padding_fraction,
+        "distinct_shapes": len(shapes),
+        "wall_s": wall,
+        "steps_per_s": len(steps) / wall if wall > 0 else 0.0,
+        "tok_per_s": acc.emitted_tokens / wall if wall > 0 else 0.0,
+        "final_loss": float(metrics["loss"]) if metrics is not None else None,
+    }
+
+
+def main(argv=None) -> list[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--profiles", nargs="*", default=list(PROFILES))
+    ap.add_argument("--data-scale", type=float, default=0.08)
+    ap.add_argument("--world", type=int, default=2)
+    ap.add_argument("--l-max", type=int, default=1024)
+    ap.add_argument("--max-steps", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    lines = []
+    profiles: dict[str, dict] = {}
+    for profile in args.profiles:
+        rows = {}
+        for layout in ("dense", "packed"):
+            r = bench_layout(
+                profile,
+                layout,
+                data_scale=args.data_scale,
+                world=args.world,
+                l_max=args.l_max,
+                max_steps=args.max_steps,
+            )
+            rows[layout] = r
+            lines.append(
+                csv_line(
+                    f"layout/{profile}/{layout}",
+                    1e6 * r["wall_s"],
+                    {
+                        "steps_per_s": f"{r['steps_per_s']:.2f}",
+                        "device_padding": f"{r['device_padding_fraction']:.4f}",
+                        "shapes": r["distinct_shapes"],
+                    },
+                )
+            )
+        rows["packed_below_dense"] = (
+            rows["packed"]["device_padding_fraction"]
+            < rows["dense"]["device_padding_fraction"]
+        )
+        profiles[profile] = rows
+
+    artifact = {
+        "config": {
+            "data_scale": args.data_scale,
+            "world": args.world,
+            "l_max": args.l_max,
+            "max_steps": args.max_steps,
+            "high_cv_profile": HIGH_CV_PROFILE,
+        },
+        "profiles": profiles,
+    }
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "layout.json").write_text(json.dumps(artifact, indent=1))
+    # Top-level perf-trajectory artifact (ISSUE 2 acceptance contract).
+    pathlib.Path("BENCH_layout.json").write_text(json.dumps(artifact, indent=1))
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in main():
+        print(line)

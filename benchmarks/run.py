@@ -10,6 +10,8 @@ under ``artifacts/bench/``.
   roofline_bench     — §Roofline (reads dry-run artifacts)
   streaming          — eager vs streaming vs prefetch data paths
                        (emits BENCH_streaming.json; also `run.py --streaming`)
+  layout             — measured dense vs packed batch layouts on real jitted
+                       steps (emits BENCH_layout.json; also `run.py --layout`)
 
 Select one module by name (``run.py streaming``) or flag (``run.py
 --streaming``); no argument runs everything.
@@ -25,6 +27,7 @@ def main() -> None:
     from benchmarks import (
         ablations,
         join_and_scaling,
+        layout,
         protocol_audit,
         roofline_bench,
         streaming,
@@ -38,6 +41,7 @@ def main() -> None:
         ("join_and_scaling", join_and_scaling),
         ("roofline", roofline_bench),
         ("streaming", streaming),
+        ("layout", layout),
     ]
     only = sys.argv[1].lstrip("-") if len(sys.argv) > 1 else None
     names = [name for name, _ in modules]

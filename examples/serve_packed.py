@@ -35,8 +35,8 @@ def main():
 
     spec = PackedBucketSpec(min_tokens=64, max_tokens=512)
     for gi, group in enumerate(groups):
-        packed = pack_group(group, spec)
-        tokens = jnp.asarray(packed.tokens % cfg.vocab_size)  # bound synth ids
+        packed = pack_group(group, spec, vocab_size=cfg.vocab_size)
+        tokens = jnp.asarray(packed.tokens)
         segments = jnp.asarray(packed.segment_ids)
         positions = jnp.asarray(packed.positions)
         # Packed prefill: one forward pass over the packed stream with

@@ -17,6 +17,18 @@ from repro.core.buckets import (
     idle_batch,
     pack_group,
     pad_group,
+    sample_token_ids,
+)
+from repro.core.layout import (
+    LAYOUTS,
+    BatchLayout,
+    DenseLayout,
+    DeviceBatch,
+    PackedLayout,
+    device_padding_stats,
+    global_batch_arrays,
+    make_layout,
+    unify_step_shapes,
 )
 from repro.core.comm import (
     JaxProcessCollective,

@@ -12,10 +12,12 @@ Two grids:
               ``align`` (default 128, the MXU lane width);
   * counts:   {1, 2, 4, 8} then multiples of 8 (sublane-friendly).
 
-``PackedBucketSpec`` is the beyond-paper alternative: a group is flattened to
-one packed token stream with segment ids (for the Pallas segment-aware
-attention kernel), bucketing only the total token count — padding then decays
-to the single tail bucket.
+``PackedBucketSpec`` buckets packed token streams (segment-id-tagged rows for
+the Pallas segment-aware attention kernel): a row-capacity grid over token
+counts plus a small row-count grid, so padding decays to the tail bucket while
+kernel block shapes stay bounded.  The layout engine (``core/layout.py``)
+builds on both specs; ``pad_group``/``pack_group`` remain the low-level
+single-group emitters (serving path, kernels tests).
 """
 
 from __future__ import annotations
@@ -32,6 +34,21 @@ from repro.core.grouping import Group
 
 def _round_up(x: int, multiple: int) -> int:
     return ((x + multiple - 1) // multiple) * multiple
+
+
+def sample_token_ids(sample, *, vocab_size: int = 32000, token_fn=None) -> np.ndarray:
+    """Token ids for one sample — the single synthesis point for every layout.
+
+    ``token_fn(sample) -> np.ndarray`` extracts ids from the payload; the
+    default synthesizes deterministic ids from the view id bounded by
+    ``vocab_size`` (benchmarks and tests where only lengths matter).  Both
+    dense and packed emitters call this, so the two layouts see bit-identical
+    token streams for the same sample.
+    """
+    if token_fn is not None:
+        return np.asarray(token_fn(sample), dtype=np.int32)[: sample.length]
+    rng = np.random.default_rng(sample.view_id)
+    return rng.integers(1, vocab_size, size=sample.length, dtype=np.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,11 +146,7 @@ def pad_group(
     mask = np.zeros((n_b, l_b), dtype=np.float32)
     lengths = np.zeros((n_b,), dtype=np.int32)
     for i, sample in enumerate(group.samples):
-        if token_fn is not None:
-            ids = np.asarray(token_fn(sample), dtype=np.int32)[: sample.length]
-        else:
-            rng = np.random.default_rng(sample.view_id)
-            ids = rng.integers(1, vocab_size, size=sample.length, dtype=np.int32)
+        ids = sample_token_ids(sample, vocab_size=vocab_size, token_fn=token_fn)
         tokens[i, : sample.length] = ids
         mask[i, : sample.length] = 1.0
         lengths[i] = sample.length
@@ -166,26 +179,57 @@ def idle_batch(shape: tuple[int, int], pad_id: int = 0) -> PaddedBatch:
 
 @dataclasses.dataclass(frozen=True)
 class PackedBucketSpec:
-    """Bucket only the packed total-token count (single axis)."""
+    """Packed-stream bucket grids: row capacity (tokens) × row count.
+
+    ``bucket_tokens`` buckets a token count onto the geometric
+    ``[min_tokens, max_tokens]`` grid (a whole single-row stream, or — via
+    the layout engine — one row's capacity, which is what keeps Pallas kernel
+    block shapes bounded).  ``bucket_rows`` buckets the number of packed rows
+    onto a small power-of-two grid so the compiled-shape count stays the
+    product of two short grids.
+    """
 
     min_tokens: int = 1024
     max_tokens: int = 1 << 20
     align: int = 128
+    max_rows: int = 4096
 
     def grid(self) -> list[int]:
         out = []
         t = self.min_tokens
         while t < self.max_tokens:
             out.append(t)
+            mid = _round_up(t * 3 // 2, self.align)
+            if t < mid < min(t * 2, self.max_tokens):
+                out.append(mid)  # 1.5x midpoints: tail waste <= 1/3 of a step
             t *= 2
         out.append(self.max_tokens)
-        return out
+        return sorted(set(out))
 
     def bucket_tokens(self, total: int) -> int:
         grid = self.grid()
         idx = bisect.bisect_left(grid, total)
         if idx >= len(grid):
             raise ValueError(f"{total} tokens exceed packed cutoff")
+        return grid[idx]
+
+    def row_grid(self) -> list[int]:
+        out = []
+        r = 1
+        while r < self.max_rows:
+            out.append(r)
+            mid = r * 3 // 2
+            if r < mid < min(r * 2, self.max_rows):
+                out.append(mid)  # 1.5x midpoints: tail waste <= 1/3 of a step
+            r *= 2
+        out.append(self.max_rows)
+        return sorted(set(out))
+
+    def bucket_rows(self, rows: int) -> int:
+        grid = self.row_grid()
+        idx = bisect.bisect_left(grid, rows)
+        if idx >= len(grid):
+            raise ValueError(f"{rows} rows exceed packed max_rows {self.max_rows}")
         return grid[idx]
 
 
@@ -210,6 +254,7 @@ def pack_group(
     *,
     pad_id: int = 0,
     token_fn=None,
+    vocab_size: int = 32000,
 ) -> PackedBatch:
     """Concatenate a group into one packed row with segment ids/positions."""
     total = spec.bucket_tokens(group.real_tokens)
@@ -219,11 +264,7 @@ def pack_group(
     mask = np.zeros((1, total), dtype=np.float32)
     cursor = 0
     for i, sample in enumerate(group.samples, start=1):
-        if token_fn is not None:
-            ids = np.asarray(token_fn(sample), dtype=np.int32)[: sample.length]
-        else:
-            rng = np.random.default_rng(sample.view_id)
-            ids = rng.integers(1, 32000, size=sample.length, dtype=np.int32)
+        ids = sample_token_ids(sample, vocab_size=vocab_size, token_fn=token_fn)
         end = cursor + sample.length
         tokens[0, cursor:end] = ids
         seg[0, cursor:end] = i

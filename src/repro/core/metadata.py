@@ -75,14 +75,16 @@ class EmitAccounting:
     emitted_samples: int = 0
     emitted_tokens: int = 0
     padded_tokens: int = 0
+    device_tokens: int = 0  # token slots actually occupied on device (layout)
     steps: int = 0
     max_step_samples: int = 0  # S_max (Theorem 2 overshoot bound)
 
-    def update(self, md: StepMetadata) -> None:
+    def update(self, md: StepMetadata, device_tokens: int = 0) -> None:
         self.steps += 1
         self.emitted_samples += md.emitted_samples
         self.emitted_tokens += md.total_tokens
         self.padded_tokens += md.total_padded_tokens
+        self.device_tokens += device_tokens
         self.max_step_samples = max(self.max_step_samples, md.emitted_samples)
 
     @property
@@ -90,3 +92,11 @@ class EmitAccounting:
         if self.padded_tokens == 0:
             return 0.0
         return 1.0 - self.emitted_tokens / self.padded_tokens
+
+    @property
+    def device_padding_fraction(self) -> float:
+        """1 - real/occupied over what the chosen batch layout shipped to
+        device — the measured quantity the padded-vs-packed choice moves."""
+        if self.device_tokens == 0:
+            return 0.0
+        return 1.0 - self.emitted_tokens / self.device_tokens

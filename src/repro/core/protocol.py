@@ -519,7 +519,8 @@ class EpochAudit:
     emitted_identities: int  # |∪_r IDs_r|
     surplus_emits: int  # Σ|emits_r| - N  (vs deterministic padding P)
     logical_iterations: int
-    rounds: int
+    rounds: int  # protocol rounds actually run
+    rounds_offline: int  # rounds the offline reference engine would have run
     abandoned_views_per_iteration: list[int]
     eta_quota: float  # max(0, 1 - S_emit / N)          (Thm 2)
     eta_identity: float  # 1 - |∪ IDs| / N              (App. C.6)
@@ -584,6 +585,11 @@ class EpochRunner:
         self.emitted_total = 0
         self.emitted_ids: set[int] = set()
         self.rounds = 0
+        # Incremental non-join stops rounds at the quota crossing (the eager
+        # win); the offline engine would have kept going until a rank
+        # advertised -1.  The continuation rounds are counted here so the
+        # audit can report both (ROADMAP "round trimming" item).
+        self.rounds_offline_extra = 0
         self.abandoned: list[int] = []
         self.steps_delivered = 0
         self.terminated_by: str | None = None
@@ -628,6 +634,26 @@ class EpochRunner:
         assert self._engine is not None
         self.rounds += self._iter_rounds
         self.abandoned.append(sum(r.outstanding for r in self._engine.ranks))
+        if terminated_by == "nonjoin_quota_crossed":
+            # The eager stop trimmed the iteration's tail rounds.  Replay the
+            # remainder on the (about-to-be-dropped) engine — rounds are a
+            # pure function of engine state, and with output_capacity
+            # unbounded the undrained queues cannot change them — so the
+            # audit also reports what the offline engine would have run.
+            # Grouping/alignment only: no padding, no compute, no delivery.
+            engine = self._engine
+            extra = 0
+            while True:
+                if self._iter_rounds + extra > engine.max_rounds:
+                    raise BoundedTerminationError(
+                        f"offline-reference replay exceeded Theorem-4 "
+                        f"envelope of {engine.max_rounds} rounds"
+                    )
+                record = engine.run_round()
+                extra += 1
+                if any(s == -1 for s in record.statuses):
+                    break
+            self.rounds_offline_extra += extra
         self.terminated_by = terminated_by
         self._engine = None  # rounds done; steps may still sit in _ready
 
@@ -738,6 +764,7 @@ class EpochRunner:
             surplus_emits=self.emitted_total - n,
             logical_iterations=self.iteration,
             rounds=self.rounds,
+            rounds_offline=self.rounds + self.rounds_offline_extra,
             abandoned_views_per_iteration=self.abandoned,
             eta_quota=max(0.0, 1.0 - self.emitted_total / n) if n else 0.0,
             eta_identity=1.0 - len(self.emitted_ids) / n if n else 0.0,

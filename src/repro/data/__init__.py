@@ -14,7 +14,6 @@ from repro.data.datasets import (
 from repro.data.loader import (
     LoaderStep,
     OnlineDynamicLoader,
-    PackedLoaderStep,
     odb_schedule,
 )
 from repro.data.oracles import (

@@ -4,14 +4,19 @@ Ties the substrate together:
 
     sampler (identity views)  →  online pipeline (realized lengths)
       →  DGAP protocol engine (grouping + cross-rank alignment)
-        →  step-aligned per-rank Groups  →  bucket padding  →  jitted step
+        →  step-aligned per-rank Groups  →  batch layout  →  jitted step
+
+The padded-vs-packed decision is a pluggable :class:`BatchLayout`
+(DESIGN.md §10): the loader builds one :class:`DeviceBatch` per rank per
+aligned step through whichever layout it was constructed with, so every
+downstream consumer (trainer, prefetcher, benchmarks) is layout-agnostic.
 
 The loader exposes two surfaces:
 
   * ``odb_schedule(...)`` — the benchmark contract shared with baselines
     (list of aligned steps of per-rank Groups/IDLE);
   * ``OnlineDynamicLoader`` — the trainer-facing iterator yielding
-    (per-rank PaddedBatch list, StepMetadata) per aligned step, with
+    (per-rank DeviceBatch list, StepMetadata) per aligned step, with
     epoch-level audits (Theorems 1/2) available after iteration.
 """
 
@@ -21,16 +26,14 @@ import collections
 import dataclasses
 from typing import Iterator, Sequence
 
-from repro.core.buckets import (
-    BucketSpec,
-    PackedBatch,
-    PackedBucketSpec,
-    PaddedBatch,
-    idle_batch,
-    pack_group,
-    pad_group,
-)
+from repro.core.buckets import BucketSpec, PackedBucketSpec
 from repro.core.grouping import Group
+from repro.core.layout import (
+    BatchLayout,
+    DeviceBatch,
+    global_batch_arrays,
+    make_layout,
+)
 from repro.core.metadata import EmitAccounting, StepMetadata, step_metadata
 from repro.core.protocol import IDLE, EpochAudit, OdbConfig, run_epoch
 from repro.data.datasets import DatasetSpec
@@ -81,20 +84,16 @@ def odb_schedule(
 
 @dataclasses.dataclass
 class LoaderStep:
-    batches: list[PaddedBatch]  # one per rank (IDLE rows are zero batches)
+    batches: list[DeviceBatch]  # one per rank (IDLE ranks are zero batches)
     metadata: StepMetadata
+    # Optional device-resident global step arrays, populated by the prefetch
+    # producer when device-put overlap is enabled (H2D hides under compute).
+    device: dict | None = None
 
-
-@dataclasses.dataclass
-class PackedLoaderStep:
-    """Beyond-paper emission mode (see DESIGN.md §8a "Packed-segment
-    emission"): each rank's group is flattened to one segment-id-tagged token
-    stream for the Pallas segment-aware attention kernel — padding decays to
-    the single tail bucket, merging the paper's ODB and Packing rows without
-    the GPU varlen caveat."""
-
-    batches: list[PackedBatch]
-    metadata: StepMetadata
+    @property
+    def device_tokens(self) -> int:
+        """Token slots this step occupies on device under its layout."""
+        return sum(b.area for b in self.batches)
 
 
 class OnlineDynamicLoader:
@@ -113,6 +112,8 @@ class OnlineDynamicLoader:
         config: OdbConfig,
         *,
         bucket_spec: BucketSpec | None = None,
+        packed_spec: PackedBucketSpec | None = None,
+        layout: str | BatchLayout = "dense",
         policy: PipelinePolicy | None = None,
         seed: int = 0,
         vocab_size: int = 32000,
@@ -130,42 +131,45 @@ class OnlineDynamicLoader:
         self.last_audit: EpochAudit | None = None
         self.last_executor = None  # StreamExecutor of the last streaming epoch
         self.last_prefetch_stats = None
-        # grid floor stays below the token budget so near-empty tail
-        # groups don't inflate to a full window
-        self.packed_spec = PackedBucketSpec(
-            min_tokens=max(128, config.l_max // 8),
-            max_tokens=max(2 * config.l_max, 2048),
+        # Row-capacity grid floor stays well below the token budget so
+        # near-empty tail groups don't inflate to a full window; the ceiling
+        # must admit the longest realizable sample (one row always fits one
+        # sample).  Granularity (floor + alignment) mirrors the dense bucket
+        # grid so the padded-vs-packed comparison is apples-to-apples.
+        self.packed_spec = packed_spec or PackedBucketSpec(
+            min_tokens=max(self.bucket_spec.min_len, config.l_max // 8),
+            max_tokens=max(2 * config.l_max, self.policy.cutoff_len, 2048),
+            align=self.bucket_spec.align,
         )
+        if isinstance(layout, str):
+            layout = make_layout(
+                layout,
+                bucket_spec=self.bucket_spec,
+                packed_spec=self.packed_spec,
+                vocab_size=vocab_size,
+            )
+        self.layout = layout
 
-    def _pad_step(self, index: int, step: list[Group | None]) -> LoaderStep:
-        """Bucket-pad one aligned step (IDLE ranks become zero batches).
+    def _layout_step(self, index: int, step: list[Group | None]) -> LoaderStep:
+        """Realize one aligned step through the batch layout (IDLE ranks
+        become zero batches of the step shape; all ranks share the planned
+        SPMD shape, so ``device_tokens`` is exactly what ships to device).
 
         Pure: ``accounting`` is updated at the *consumption* point, not here
-        — the prefetch producer pads steps the consumer may never take, and
+        — the prefetch producer builds steps the consumer may never take, and
         abandoned staged steps must not count as emitted.
         """
-        fallback_shape = self.bucket_spec.bucket_shape(1, self.bucket_spec.min_len)
-        padded: list[PaddedBatch] = []
-        shape = None
-        for group in step:
-            if group is not IDLE:
-                pb = pad_group(group, self.bucket_spec, vocab_size=self.vocab_size)
-                padded.append(pb)
-                shape = pb.shape
-        row: list[PaddedBatch] = []
-        j = 0
-        for group in step:
-            if group is IDLE:
-                row.append(idle_batch(shape or fallback_shape))
-            else:
-                row.append(padded[j])
-                j += 1
+        row = self.layout.build_step(step)
         return LoaderStep(batches=row, metadata=step_metadata(index, step))
 
-    def epoch(self, epoch: int = 0) -> Iterator[LoaderStep]:
+    def epoch(
+        self, epoch: int = 0, *, device_put: bool = False
+    ) -> Iterator[LoaderStep]:
         """Eager path: realize every length, schedule the whole epoch, then
         deliver (the offline regime the streaming path replaces — kept for
-        audits and as the equivalence reference)."""
+        audits and as the equivalence reference).  ``device_put`` stages the
+        assembled arrays on device inline (no producer thread to overlap
+        with here, but the flag keeps eager/streaming comparisons honest)."""
         records = self.dataset.records(self.seed)
         lengths = realize_lengths(records, self.policy, epoch)
         steps, audit = odb_schedule(
@@ -173,9 +177,22 @@ class OnlineDynamicLoader:
         )
         self.last_audit = audit
         for i, step in enumerate(steps):
-            loader_step = self._pad_step(i, step)
-            self.accounting.update(loader_step.metadata)
+            loader_step = self._layout_step(i, step)
+            if device_put:
+                loader_step = self._stage_device(loader_step)
+            self.accounting.update(
+                loader_step.metadata, device_tokens=loader_step.device_tokens
+            )
             yield loader_step
+
+    def _stage_device(self, loader_step: LoaderStep) -> LoaderStep:
+        """Assemble the global step arrays and issue ``jax.device_put`` —
+        runs on the prefetch producer thread so H2D hides under compute."""
+        import jax
+
+        arrays = global_batch_arrays(loader_step.batches, self.layout)
+        loader_step.device = {k: jax.device_put(v) for k, v in arrays.items()}
+        return loader_step
 
     def streaming_epoch(
         self,
@@ -184,6 +201,7 @@ class OnlineDynamicLoader:
         lookahead: int | None = None,
         prefetch: bool = False,
         prefetch_depth: int = 2,
+        device_put: bool = False,
         resume_from: "StreamCheckpoint | None" = None,
         finalize_audit: bool = True,
     ) -> Iterator[LoaderStep]:
@@ -249,20 +267,26 @@ class OnlineDynamicLoader:
                 step = executor.step()
                 if step is None:
                     return
-                padded = self._pad_step(executor.runner.steps_delivered - 1, step)
+                built = self._layout_step(executor.runner.steps_delivered - 1, step)
                 if track:
                     staged.append(step)
-                yield padded
+                yield built
 
         try:
             if prefetch:
-                it = PrefetchIterator(produce(track=True), depth=prefetch_depth)
+                it = PrefetchIterator(
+                    produce(track=True),
+                    depth=prefetch_depth,
+                    stage=self._stage_device if device_put else None,
+                )
                 self.last_prefetch_stats = it.stats
                 try:
-                    for padded in it:
+                    for built in it:
                         staged.popleft()  # consumed: off the rollback ledger
-                        self.accounting.update(padded.metadata)
-                        yield padded
+                        self.accounting.update(
+                            built.metadata, device_tokens=built.device_tokens
+                        )
+                        yield built
                 finally:
                     # Blocks until the producer's in-flight step finishes
                     # (bounded by the protocol termination envelope) — the
@@ -276,9 +300,13 @@ class OnlineDynamicLoader:
                         executor.requeue(list(staged))
                         staged.clear()
             else:
-                for padded in produce():
-                    self.accounting.update(padded.metadata)
-                    yield padded
+                for built in produce():
+                    if device_put:
+                        built = self._stage_device(built)
+                    self.accounting.update(
+                        built.metadata, device_tokens=built.device_tokens
+                    )
+                    yield built
         finally:
             # Epoch-level audit contract (Theorem 1): even when the consumer
             # stops early (max_steps), finish the remaining *data-side*
@@ -292,53 +320,3 @@ class OnlineDynamicLoader:
                 while executor.step() is not None:
                     pass
             self.last_audit = executor.audit()
-
-    def packed_epoch(self, epoch: int = 0):
-        """Iterate packed-segment steps (beyond-paper emission; see
-        PackedLoaderStep).  IDLE ranks emit an all-padding stream."""
-        import numpy as np
-
-        records = self.dataset.records(self.seed)
-        lengths = realize_lengths(records, self.policy, epoch)
-        steps, audit = odb_schedule(
-            lengths, self.world_size, self.config, seed=self.seed, epoch=epoch
-        )
-        self.last_audit = audit
-        token_fn = None
-        for i, step in enumerate(steps):
-            packed = []
-            size = None
-            for group in step:
-                if group is not IDLE:
-                    pk = pack_group(group, self.packed_spec)
-                    pk = PackedBatch(
-                        tokens=pk.tokens % self.vocab_size,
-                        segment_ids=pk.segment_ids,
-                        positions=pk.positions,
-                        loss_mask=pk.loss_mask,
-                        real_samples=pk.real_samples,
-                        real_tokens=pk.real_tokens,
-                    )
-                    packed.append(pk)
-                    size = pk.tokens.shape[1]
-            row = []
-            j = 0
-            for group in step:
-                if group is IDLE:
-                    t = size or self.packed_spec.min_tokens
-                    row.append(
-                        PackedBatch(
-                            tokens=np.zeros((1, t), np.int32),
-                            segment_ids=np.zeros((1, t), np.int32),
-                            positions=np.zeros((1, t), np.int32),
-                            loss_mask=np.zeros((1, t), np.float32),
-                            real_samples=0,
-                            real_tokens=0,
-                        )
-                    )
-                else:
-                    row.append(packed[j])
-                    j += 1
-            md = step_metadata(i, step)
-            self.accounting.update(md)
-            yield PackedLoaderStep(batches=row, metadata=md)

@@ -19,16 +19,20 @@ class ShapeCell:
     seq_len: int
     global_batch: int
     kind: str  # "train" | "prefill" | "decode"
+    layout: str = "dense"  # batch layout of train cells (DESIGN.md §10)
 
 
 SHAPES = {
     "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    # Packed layout: same 4k row capacity, fewer rows (each row carries
+    # ~row_capacity real tokens instead of one right-padded sample).
+    "train_4k_packed": ShapeCell("train_4k_packed", 4096, 64, "train", layout="packed"),
     "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
     "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
 }
 
-SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SHAPE_ORDER = ("train_4k", "train_4k_packed", "prefill_32k", "decode_32k", "long_500k")
 
 
 def applicability(cfg, shape_name: str) -> tuple[bool, str]:
@@ -45,7 +49,13 @@ def applicability(cfg, shape_name: str) -> tuple[bool, str]:
 
 
 def train_batch_specs(cfg, cell: ShapeCell) -> dict:
-    """ShapeDtypeStruct stand-ins for one global training batch."""
+    """ShapeDtypeStruct stand-ins for one global training batch.
+
+    The batch contract is per-layout (DESIGN.md §10): the packed layout
+    additionally threads within-segment positions and segment ids through to
+    the model — the same dict ``assemble_model_batch`` builds at train time,
+    so the dry-run compiles exactly what training runs.
+    """
     b, s = cell.global_batch, cell.seq_len
     if cfg.input_embeds:
         return {
@@ -53,11 +63,15 @@ def train_batch_specs(cfg, cell: ShapeCell) -> dict:
             "labels": ShapeDtypeStruct((b, s), jnp.int32),
             "loss_mask": ShapeDtypeStruct((b, s), jnp.float32),
         }
-    return {
+    specs = {
         "tokens": ShapeDtypeStruct((b, s), jnp.int32),
         "labels": ShapeDtypeStruct((b, s), jnp.int32),
         "loss_mask": ShapeDtypeStruct((b, s), jnp.float32),
     }
+    if cell.layout == "packed":
+        specs["positions"] = ShapeDtypeStruct((b, s), jnp.int32)
+        specs["segments"] = ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
 
 
 def prefill_token_specs(cfg, cell: ShapeCell):

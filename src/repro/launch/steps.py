@@ -24,40 +24,13 @@ from repro.launch.shapes import (
     train_batch_specs,
 )
 from repro.models.model import LM, shift_labels
-from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+# The canonical train step lives with the trainer (shared builder: what the
+# dry-run lowers here is exactly what the deployment trainer jits).
+from repro.train.trainer import make_train_step  # noqa: F401
 
 Params = Any
-
-
-# -----------------------------------------------------------------------------
-# Train
-# -----------------------------------------------------------------------------
-
-
-def make_train_step(model: LM, opt_cfg: OptimizerConfig):
-    """(state, batch) -> (state, metrics).
-
-    Loss normalization: the global masked per-token mean — identical to the
-    paper's exact token-level scaled objective (Eq. 2 collapses to the global
-    per-token mean in SPMD; bit-exactness of the per-rank weighting form is
-    verified separately in tests/test_loss_scaling.py).
-    """
-
-    def train_step(state, batch):
-        def loss_fn(params):
-            loss_sum, tokens = model.loss_sums(params, batch)
-            return loss_sum / jnp.maximum(tokens, 1.0), tokens
-
-        (loss, tokens), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            state["params"]
-        )
-        new_params, new_opt, opt_metrics = adamw_update(
-            state["params"], grads, state["opt"], opt_cfg
-        )
-        metrics = {"loss": loss, "tokens": tokens, **opt_metrics}
-        return {"params": new_params, "opt": new_opt}, metrics
-
-    return train_step
 
 
 def abstract_train_state(model: LM, opt_cfg: OptimizerConfig):

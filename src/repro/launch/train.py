@@ -51,6 +51,16 @@ def main() -> None:
     )
     ap.add_argument("--no-prefetch", action="store_true")
     ap.add_argument("--prefetch-depth", type=int, default=2)
+    ap.add_argument(
+        "--layout", default="dense", choices=("dense", "packed"),
+        help="batch layout: dense bucket padding or packed segment streams "
+             "(DESIGN.md §10)",
+    )
+    ap.add_argument(
+        "--device-put", action="store_true",
+        help="stage jax.device_put on the prefetch producer so H2D hides "
+             "under the jitted step",
+    )
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -64,6 +74,7 @@ def main() -> None:
             join_mode=not args.non_join,
         ),
         bucket_spec=BucketSpec(min_len=128, max_len=16384, max_count=1024),
+        layout=args.layout,
         vocab_size=cfg.vocab_size,
     )
     trainer = Trainer(
@@ -74,6 +85,7 @@ def main() -> None:
             log_every=5, max_steps=args.steps,
             streaming=not args.eager, prefetch=not args.no_prefetch,
             prefetch_depth=args.prefetch_depth, lookahead=args.lookahead,
+            device_put=args.device_put,
         ),
     )
 
@@ -97,7 +109,8 @@ def main() -> None:
     for h in trainer.history[-10:]:
         print(
             f"step {h['step']:>5}  loss {h['loss']:.4f}  sam/s {h['sam_per_s']:.2f}  "
-            f"pad {100 * h['padding']:.2f}%"
+            f"pad {100 * h['padding']:.2f}%  "
+            f"dev-pad {100 * h.get('device_padding', 0.0):.2f}%"
         )
     audit = loader.last_audit
     if audit:

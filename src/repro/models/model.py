@@ -239,12 +239,28 @@ class LM:
         return logits, new_caches
 
 
-def shift_labels(tokens: jax.Array, loss_mask: jax.Array, pad_id: int = 0):
-    """Next-token targets: labels[t] = tokens[t+1]; last position masked."""
+def shift_labels(
+    tokens: jax.Array,
+    loss_mask: jax.Array,
+    pad_id: int = 0,
+    segments: jax.Array | None = None,
+):
+    """Next-token targets: labels[t] = tokens[t+1]; last position masked.
+
+    With ``segments`` (packed layout) a position is additionally masked when
+    the next token belongs to a different segment — otherwise the last token
+    of each packed sample would be trained to predict its row-neighbour's
+    first token (cross-sample label contamination).
+    """
     labels = jnp.concatenate(
         [tokens[:, 1:], jnp.full_like(tokens[:, :1], pad_id)], axis=1
     )
     mask = loss_mask * jnp.concatenate(
         [loss_mask[:, 1:], jnp.zeros_like(loss_mask[:, :1])], axis=1
     )
+    if segments is not None:
+        next_seg = jnp.concatenate(
+            [segments[:, 1:], jnp.zeros_like(segments[:, :1])], axis=1
+        )
+        mask = mask * (segments == next_seg).astype(mask.dtype)
     return labels, mask

@@ -210,6 +210,7 @@ class StreamExecutor:
                 "emitted_total": runner.emitted_total,
                 "emitted_ids": sorted(runner.emitted_ids),
                 "rounds": runner.rounds,
+                "rounds_offline_extra": runner.rounds_offline_extra,
                 "abandoned": list(runner.abandoned),
                 "steps_delivered": runner.steps_delivered,
                 "terminated_by": runner.terminated_by,
@@ -282,6 +283,7 @@ class StreamExecutor:
         runner.emitted_total = rs["emitted_total"]
         runner.emitted_ids = set(rs["emitted_ids"])
         runner.rounds = rs["rounds"]
+        runner.rounds_offline_extra = rs.get("rounds_offline_extra", 0)
         runner.abandoned = list(rs["abandoned"])
         runner.steps_delivered = rs["steps_delivered"]
         runner.terminated_by = rs["terminated_by"]

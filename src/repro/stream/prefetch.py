@@ -55,12 +55,23 @@ class PrefetchStats:
 
 
 class PrefetchIterator(Generic[T]):
-    """Iterate ``source`` through a ``depth``-bounded background queue."""
+    """Iterate ``source`` through a ``depth``-bounded background queue.
 
-    def __init__(self, source: Iterable[T], *, depth: int = 2) -> None:
+    ``stage`` is an optional producer-side hook applied to every item before
+    it is queued (timed into ``produce_s``).  The loader uses it to issue
+    ``jax.device_put`` on staged ``DeviceBatch`` arrays so the H2D transfer
+    hides under the consumer's jitted step (ROADMAP "device-put overlap"):
+    by the time the consumer dequeues, the buffers are already device-resident
+    (double-buffered by the queue depth).
+    """
+
+    def __init__(
+        self, source: Iterable[T], *, depth: int = 2, stage=None
+    ) -> None:
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self.depth = depth
+        self._stage = stage
         self.stats = PrefetchStats()
         self._queue: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
@@ -90,6 +101,8 @@ class PrefetchIterator(Generic[T]):
                     item = next(it)
                 except StopIteration:
                     break
+                if self._stage is not None:
+                    item = self._stage(item)
                 self.stats.produce_s += time.perf_counter() - t0
                 if not self._put(item):
                     return

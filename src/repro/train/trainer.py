@@ -3,12 +3,14 @@
 Two execution paths:
 
   * ``Trainer`` — the deployment path: consumes step-aligned per-rank
-    ``PaddedBatch``es from :class:`repro.data.loader.OnlineDynamicLoader`,
+    ``DeviceBatch``es from :class:`repro.data.loader.OnlineDynamicLoader`
+    (whatever batch layout the loader was built with — DESIGN.md §10),
     unifies them into one global SPMD batch, and drives the jitted
-    ``train_step`` (launch/steps.py).  The global masked per-token mean that
-    the step computes is exactly the token-level scaled objective: IDLE
-    ranks contribute zero tokens and are annihilated (Eq. 2 with t_r = 0).
-    Fault tolerance: periodic atomic checkpoints + resume-from-latest.
+    ``train_step`` shared with launch/steps.py.  The global masked per-token
+    mean that the step computes is exactly the token-level scaled objective:
+    IDLE ranks contribute zero tokens and are annihilated (Eq. 2 with
+    t_r = 0).  Fault tolerance: periodic atomic checkpoints +
+    resume-from-latest.
 
   * ``dp_shardmap_step`` — the paper-literal path: per-rank mean losses
     prescaled by ``W·w_r`` and mean-reduced over an explicit ``psum``,
@@ -25,50 +27,89 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.buckets import PaddedBatch
+from repro.core.layout import (
+    BatchLayout,
+    global_batch_arrays,
+    unify_step_shapes,
+)
 from repro.core.loss_scaling import prescale_factor
-from repro.data.loader import OnlineDynamicLoader
+from repro.data.loader import LoaderStep, OnlineDynamicLoader
 from repro.models.model import LM, shift_labels
 from repro.train import checkpoint as ckpt
 from repro.train.compression import init_error_state, psum_compressed
 from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
 
+__all__ = [
+    "Trainer",
+    "TrainerConfig",
+    "assemble_model_batch",
+    "dp_shardmap_step",
+    "global_batch_arrays",  # re-exported from core.layout (layout-aware)
+    "make_train_step",
+    "unify_step_shapes",
+]
 
-def unify_step_shapes(batches: list[PaddedBatch]) -> list[PaddedBatch]:
-    """Re-pad all ranks' batches to the step-max bucket shape (SPMD needs one
-    global shape; bucket grids are shared so the max is itself a bucket)."""
-    n = max(b.tokens.shape[0] for b in batches)
-    l = max(b.tokens.shape[1] for b in batches)
-    out = []
-    for b in batches:
-        if b.tokens.shape == (n, l):
-            out.append(b)
-            continue
-        tokens = np.zeros((n, l), dtype=b.tokens.dtype)
-        mask = np.zeros((n, l), dtype=b.loss_mask.dtype)
-        lengths = np.zeros((n,), dtype=b.lengths.dtype)
-        sn, sl = b.tokens.shape
-        tokens[:sn, :sl] = b.tokens
-        mask[:sn, :sl] = b.loss_mask
-        lengths[:sn] = b.lengths
-        out.append(
-            PaddedBatch(
-                tokens=tokens, loss_mask=mask, lengths=lengths,
-                real_samples=b.real_samples, real_tokens=b.real_tokens,
-            )
+
+def make_train_step(model: LM, opt_cfg: OptimizerConfig):
+    """(state, batch) -> (state, metrics) — THE train step.
+
+    One builder shared by the deployment trainer (jitted shape-polymorphic
+    over the bucket grids) and the launch/dry-run compile cells
+    (``launch/steps.py`` pins shapes + mesh shardings around this same
+    function), so what the dry-run lowers is what training runs.
+
+    Loss normalization: the global masked per-token mean — identical to the
+    paper's exact token-level scaled objective (Eq. 2 collapses to the global
+    per-token mean in SPMD; bit-exactness of the per-rank weighting form is
+    verified separately in tests/test_loss_scaling.py).
+    """
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            loss_sum, tokens = model.loss_sums(params, batch)
+            return loss_sum / jnp.maximum(tokens, 1.0), tokens
+
+        (loss, tokens), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"]
         )
-    return out
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg
+        )
+        metrics = {"loss": loss, "tokens": tokens, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
 
 
-def global_batch_arrays(batches: list[PaddedBatch]) -> dict[str, np.ndarray]:
-    """Stack per-rank batches into the global (W·n, len) training batch."""
-    batches = unify_step_shapes(batches)
-    tokens = np.concatenate([b.tokens for b in batches], axis=0)
-    mask = np.concatenate([b.loss_mask for b in batches], axis=0)
-    return {"tokens": tokens, "loss_mask": mask}
+def assemble_model_batch(loader_step: LoaderStep, layout: BatchLayout) -> dict:
+    """Turn one aligned LoaderStep into the jitted-step batch dict.
+
+    Uses the device-resident arrays staged by the prefetch producer when
+    present (device-put overlap), otherwise assembles from host numpy.  The
+    packed layout threads positions/segments through to the model (segment-
+    aware attention masking + segment-aware label shift); the dense layout
+    keeps the lean three-array contract — one sample per row under causal
+    masking realizes the identical objective without the segment compare.
+    """
+    arrays = loader_step.device
+    if arrays is None:
+        host = global_batch_arrays(loader_step.batches, layout)
+        arrays = {k: jnp.asarray(v) for k, v in host.items()}
+    tokens = arrays["tokens"]
+    if layout.needs_segments:
+        segments = arrays["segments"]
+        labels, mask = shift_labels(tokens, arrays["loss_mask"], segments=segments)
+        return {
+            "tokens": tokens,
+            "positions": arrays["positions"],
+            "segments": segments,
+            "labels": labels,
+            "loss_mask": mask,
+        }
+    labels, mask = shift_labels(tokens, arrays["loss_mask"])
+    return {"tokens": tokens, "labels": labels, "loss_mask": mask}
 
 
 @dataclasses.dataclass
@@ -85,6 +126,9 @@ class TrainerConfig:
     prefetch: bool = True
     prefetch_depth: int = 2
     lookahead: int | None = None
+    # Stage jax.device_put on the prefetch producer so H2D transfer hides
+    # under the jitted step (ROADMAP "device-put overlap").
+    device_put: bool = False
 
 
 class Trainer:
@@ -107,22 +151,9 @@ class Trainer:
         self.history: list[dict] = []
 
     def _build_step(self):
-        opt_cfg = self.opt_cfg
-
-        def step(state, batch):
-            def loss_fn(params):
-                loss_sum, tokens = self.model.loss_sums(params, batch)
-                return loss_sum / jnp.maximum(tokens, 1.0), tokens
-
-            (loss, tokens), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                state["params"]
-            )
-            params, opt, om = adamw_update(state["params"], grads, state["opt"], opt_cfg)
-            return {"params": params, "opt": opt}, {
-                "loss": loss, "tokens": tokens, **om
-            }
-
-        self._train_step = jax.jit(step, donate_argnums=(0,))
+        self._train_step = jax.jit(
+            make_train_step(self.model, self.opt_cfg), donate_argnums=(0,)
+        )
 
     def init_state(self, rng) -> dict:
         params = self.model.init(rng)
@@ -143,8 +174,9 @@ class Trainer:
                 lookahead=self.cfg.lookahead,
                 prefetch=self.cfg.prefetch,
                 prefetch_depth=self.cfg.prefetch_depth,
+                device_put=self.cfg.device_put,
             )
-        return self.loader.epoch(epoch)
+        return self.loader.epoch(epoch, device_put=self.cfg.device_put)
 
     def train_epoch(self, state: dict, epoch: int = 0, start_step: int = 0):
         if self._train_step is None:
@@ -153,10 +185,7 @@ class Trainer:
         t0 = time.perf_counter()
         emitted = 0
         for loader_step in self._epoch_steps(epoch):
-            batch_np = global_batch_arrays(loader_step.batches)
-            tokens = jnp.asarray(batch_np["tokens"])
-            labels, mask = shift_labels(tokens, jnp.asarray(batch_np["loss_mask"]))
-            batch = {"tokens": tokens, "labels": labels, "loss_mask": mask}
+            batch = assemble_model_batch(loader_step, self.loader.layout)
             state, metrics = self._train_step(state, batch)
             step_idx += 1
             emitted += loader_step.metadata.emitted_samples
@@ -170,6 +199,13 @@ class Trainer:
                     "emitted_samples": emitted,
                     "sam_per_s": emitted / dt if dt > 0 else 0.0,
                     "padding": loader_step.metadata.padding_fraction,
+                    "device_padding": (
+                        1.0
+                        - loader_step.metadata.total_tokens
+                        / loader_step.device_tokens
+                        if loader_step.device_tokens
+                        else 0.0
+                    ),
                 }
                 self.history.append(rec)
             if (

@@ -82,6 +82,25 @@ class TestPackedEmission:
         np.testing.assert_array_equal(pk.positions[0, 5:8], [0, 1, 2])
         assert pk.real_tokens == 15
 
+    def test_vocab_size_bounds_synthesized_ids(self):
+        """pack_group used to hardcode vocab 32000 while pad_group threaded
+        it through — both now share one synthesis helper."""
+        g = group_of([9, 17])
+        packed = pack_group(
+            g, PackedBucketSpec(min_tokens=16, max_tokens=64, align=8),
+            vocab_size=101,
+        )
+        padded = pad_group(
+            g, BucketSpec(min_len=8, max_len=64, align=8, max_count=8),
+            vocab_size=101,
+        )
+        assert int(packed.tokens.max()) < 101
+        assert int(padded.tokens.max()) < 101
+        real = packed.tokens[packed.segment_ids > 0]
+        np.testing.assert_array_equal(
+            np.sort(real), np.sort(padded.tokens[padded.loss_mask > 0])
+        )
+
     def test_packed_padding_below_padded(self):
         """Packed emission strictly dominates per-sample padding on ragged groups."""
         lengths = [37, 101, 64, 512, 48, 222, 90, 33]

@@ -92,18 +92,22 @@ class TestEndToEnd:
         assert audit.eta_identity == 0.0  # join-mode coverage held during training
 
     def test_global_batch_assembly_unifies_shapes(self):
-        from repro.core.buckets import PaddedBatch
-        a = PaddedBatch(
-            tokens=np.ones((2, 8), np.int32), loss_mask=np.ones((2, 8), np.float32),
-            lengths=np.array([8, 8], np.int32), real_samples=2, real_tokens=16,
-        )
-        b = PaddedBatch(
-            tokens=np.ones((4, 16), np.int32), loss_mask=np.ones((4, 16), np.float32),
-            lengths=np.array([16] * 4, np.int32), real_samples=4, real_tokens=64,
-        )
-        out = global_batch_arrays([a, b])
+        from repro.core.layout import DeviceBatch
+
+        def db(rows, t):
+            return DeviceBatch(
+                tokens=np.ones((rows, t), np.int32),
+                positions=np.zeros((rows, t), np.int32),
+                segments=np.ones((rows, t), np.int32),
+                loss_mask=np.ones((rows, t), np.float32),
+                lengths=np.full((rows,), t, np.int32),
+                real_samples=rows, real_tokens=rows * t,
+            )
+
+        out = global_batch_arrays([db(2, 8), db(4, 16)])
         assert out["tokens"].shape == (8, 16)
         assert out["loss_mask"][:2, 8:].sum() == 0  # re-padded region masked
+        assert out["segments"][:2, 8:].sum() == 0  # grown region is padding
 
 
 class TestCheckpoint:
@@ -164,39 +168,23 @@ class TestCompression:
 
 
 class TestPackedEmission:
-    """Beyond-paper packed-segment path (DESIGN.md §8a)."""
+    """First-class packed-segment layout (DESIGN.md §10)."""
 
-    def test_packed_epoch_trains_with_segment_masking(self):
+    def test_packed_layout_trains_with_segment_masking(self):
         cfg = dataclasses.replace(get_smoke_config("qwen3_0_6b"), vocab_size=256)
         model = LM(cfg)
         loader = OnlineDynamicLoader(
             tiny_dataset(48), world_size=2,
             config=OdbConfig(l_max=512, buffer_size=16, prefetch_factor=8, num_workers=2),
-            vocab_size=256,
+            layout="packed", vocab_size=256,
         )
         params = model.init(jax.random.PRNGKey(0))
-        from repro.models.model import shift_labels
+        from repro.train.trainer import assemble_model_batch
         steps = 0
-        for ls in loader.packed_epoch(0):
+        for ls in loader.epoch(0):
             assert len(ls.batches) == 2
-            # unify shapes across ranks, then run a real forward + grad
-            width = max(b.tokens.shape[1] for b in ls.batches)
-            toks, segs, poss, masks = [], [], [], []
-            for b in ls.batches:
-                pad = width - b.tokens.shape[1]
-                toks.append(np.pad(b.tokens, ((0, 0), (0, pad))))
-                segs.append(np.pad(b.segment_ids, ((0, 0), (0, pad))))
-                poss.append(np.pad(b.positions, ((0, 0), (0, pad))))
-                masks.append(np.pad(b.loss_mask, ((0, 0), (0, pad))))
-            batch_tokens = jnp.asarray(np.concatenate(toks))
-            labels, mask = shift_labels(batch_tokens, jnp.asarray(np.concatenate(masks)))
-            batch = {
-                "tokens": batch_tokens,
-                "segments": jnp.asarray(np.concatenate(segs)),
-                "positions": jnp.asarray(np.concatenate(poss)),
-                "labels": labels,
-                "loss_mask": mask,
-            }
+            batch = assemble_model_batch(ls, loader.layout)
+            assert "segments" in batch and "positions" in batch
             loss_sum, tc = model.loss_sums(params, batch)
             assert bool(jnp.isfinite(loss_sum))
             steps += 1
@@ -204,25 +192,25 @@ class TestPackedEmission:
                 break
         assert steps >= 1
 
-    def test_packed_padding_below_padded_mode(self):
-        loader_kwargs = dict(
-            world_size=2,
-            config=OdbConfig(l_max=512, buffer_size=32, prefetch_factor=8, num_workers=2),
-            vocab_size=256,
+    def test_packed_trainer_end_to_end(self):
+        cfg = dataclasses.replace(get_smoke_config("qwen3_0_6b"), vocab_size=256)
+        model = LM(cfg)
+        loader = OnlineDynamicLoader(
+            tiny_dataset(), world_size=2,
+            config=OdbConfig(l_max=256, buffer_size=16, prefetch_factor=8, num_workers=2),
+            layout="packed", vocab_size=256,
         )
-        packed_loader = OnlineDynamicLoader(tiny_dataset(64), **loader_kwargs)
-        packed_area = 0
-        real = 0
-        for ls in packed_loader.packed_epoch(0):
-            for b in ls.batches:
-                packed_area += b.tokens.shape[1]
-                real += b.real_tokens
-        padded_loader = OnlineDynamicLoader(tiny_dataset(64), **loader_kwargs)
-        padded_area = 0
-        for ls in padded_loader.epoch(0):
-            for b in ls.batches:
-                padded_area += b.tokens.shape[0] * b.tokens.shape[1]
-        assert packed_area <= padded_area  # packing dominates bucket padding
+        trainer = Trainer(
+            model, loader,
+            OptimizerConfig(lr=3e-3, total_steps=40, warmup_ratio=0.05),
+            TrainerConfig(log_every=1),
+        )
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        state, steps = trainer.train_epoch(state, epoch=0)
+        losses = [h["loss"] for h in trainer.history]
+        assert steps >= 2
+        assert losses[-1] < losses[0], losses
+        assert loader.last_audit.eta_identity == 0.0
 
 
 class TestElasticReshard:
