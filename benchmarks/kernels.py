@@ -1,0 +1,292 @@
+"""Kernel micro-benchmark: XLA blockwise vs Pallas flash (BENCH_kernels.json).
+
+Everything measured on this host (DESIGN.md §11):
+
+  * forward and forward+backward wall time of the two train-path attention
+    implementations — the blockwise-XLA scan (``models/attention``) and the
+    Pallas segment-aware flash kernel (``repro.kernels``, interpret mode on
+    CPU, compiled on TPU) — on *real packed batches*: the high-CV
+    ``longtail`` profile is run through the packed :class:`BatchLayout`, and
+    the resulting segment rows drive both paths;
+  * numerical parity (forward max-err on valid rows + gradient max-err) as a
+    sanity rail for the timings;
+  * the **live-tile census** of the flash grid under (a) causal skipping
+    alone and (b) causal + segment-range block skipping — the acceptance
+    quantity: packing must translate into a strictly lower live-tile
+    fraction on the high-CV profile;
+  * the autotuned (block_q, block_kv) schedule for the bench shape
+    (``repro.kernels.autotune``, persisted under ``artifacts/autotune/``).
+
+Artifacts: ``<out>/kernels.json`` + top-level ``BENCH_kernels.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core import OdbConfig
+from repro.data import OnlineDynamicLoader, get_dataset
+from repro.kernels.flash_attention import live_tile_counts, select_block
+
+HIGH_CV_PROFILE = "longtail"
+
+
+def packed_rows(
+    profile: str,
+    *,
+    data_scale: float,
+    world: int,
+    l_max: int,
+    max_census_rows: int,
+    max_steps: int,
+) -> dict[int, np.ndarray]:
+    """Real packed segment rows of ``profile``, grouped by row width.
+
+    The packed layout plans one (rows, capacity) shape per aligned step, so
+    widths vary across steps; collecting across steps gives both the census
+    population and a narrow multi-segment set for the timed kernels."""
+    loader = OnlineDynamicLoader(
+        get_dataset(profile, scale=data_scale),
+        world_size=world,
+        config=OdbConfig(
+            l_max=l_max, buffer_size=64, prefetch_factor=32, num_workers=2
+        ),
+        layout="packed",
+        vocab_size=512,
+    )
+    by_width: dict[int, list[np.ndarray]] = {}
+    n = 0
+    for i, ls in enumerate(loader.epoch(0)):
+        for batch in ls.batches:
+            for r in range(batch.segments.shape[0]):
+                seg = batch.segments[r]
+                if seg.max() <= 0:
+                    continue  # IDLE / all-padding rows carry no tiles
+                by_width.setdefault(seg.shape[0], []).append(seg)
+                n += 1
+        if n >= max_census_rows or i + 1 >= max_steps:
+            break
+    return {w: np.stack(rows, axis=0) for w, rows in by_width.items()}
+
+
+def aggregate_census(by_width: dict[int, np.ndarray], block: int) -> dict:
+    """Live-tile census over every collected row (causal vs segment-aware)."""
+    agg = {"tiles": 0, "causal_live": 0, "segment_live": 0}
+    for width, rows in by_width.items():
+        t = live_tile_counts(rows, width, block, block, causal=True)
+        for key in agg:
+            agg[key] += t[key]
+    total = agg["tiles"]
+    return {
+        **agg,
+        "block": block,
+        "rows": int(sum(r.shape[0] for r in by_width.values())),
+        "causal_live_fraction": agg["causal_live"] / total if total else 0.0,
+        "segment_live_fraction": agg["segment_live"] / total if total else 0.0,
+    }
+
+
+def timing_rows(
+    by_width: dict[int, np.ndarray], *, max_seq: int, max_rows: int
+) -> np.ndarray:
+    """Pick the timed set: the narrowest-fitting width with the most packed
+    segments per row (multi-segment rows exercise the block skipping)."""
+    def rank(width):
+        rows = by_width[width]
+        return (width <= max_seq, int(rows.max()), rows.shape[0])
+
+    width = max(by_width, key=rank)
+    return by_width[width][:max_rows]
+
+
+def _time(fn, *args, repeats: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn(*args))  # compile / first interpret pass
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeats
+
+
+def bench_kernels(
+    *,
+    data_scale: float,
+    world: int,
+    l_max: int,
+    max_rows: int,
+    max_seq: int,
+    census_block: int,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    repeats: int,
+) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.autotune import autotune_blocks, cached_schedule, shape_key
+    from repro.kernels.ops import flash_attention
+    from repro.models.attention import _block_sdpa
+
+    by_width = packed_rows(
+        HIGH_CV_PROFILE,
+        data_scale=data_scale,
+        world=world,
+        l_max=l_max,
+        max_census_rows=64,
+        max_steps=16,
+    )
+    seg_np = timing_rows(by_width, max_seq=max_seq, max_rows=max_rows)
+    b, s = seg_np.shape
+    h, kv, d = heads, kv_heads, head_dim
+    g = h // kv
+    seg = jnp.asarray(seg_np)
+    # Within-segment positions, as the packed layout ships them.
+    pos_np = np.zeros_like(seg_np)
+    for i in range(b):
+        for sid in np.unique(seg_np[i]):
+            if sid <= 0:
+                continue
+            idx = np.nonzero(seg_np[i] == sid)[0]
+            pos_np[i, idx] = np.arange(idx.size)
+    pos = jnp.asarray(pos_np)
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    valid = jnp.asarray((seg_np > 0)[:, :, None, None].astype(np.float32))
+    scale = 1.0 / (d**0.5)
+
+    block = select_block(s, 128)
+
+    def xla_fwd(q_, k_, v_):
+        qg = q_.reshape(b, s, kv, g, d)
+        out = _block_sdpa(qg, k_, v_, pos, pos, seg, seg, None, True, scale)
+        return out.reshape(b, s, h, d)
+
+    def flash_fwd(q_, k_, v_):
+        return flash_attention(q_, k_, v_, seg, True, block, block)
+
+    def loss_of(fwd):
+        def loss(q_, k_, v_):
+            return jnp.sum((fwd(q_, k_, v_).astype(jnp.float32) * valid) ** 2)
+        return jax.grad(loss, argnums=(0, 1, 2))
+
+    xla_fwd_j = jax.jit(xla_fwd)
+    flash_fwd_j = jax.jit(flash_fwd)
+    xla_bwd_j = jax.jit(loss_of(xla_fwd))
+    flash_bwd_j = jax.jit(loss_of(flash_fwd))
+
+    timings = {
+        "xla_fwd_s": _time(xla_fwd_j, q, k, v, repeats=repeats),
+        "flash_fwd_s": _time(flash_fwd_j, q, k, v, repeats=repeats),
+        "xla_fwdbwd_s": _time(xla_bwd_j, q, k, v, repeats=repeats),
+        "flash_fwdbwd_s": _time(flash_bwd_j, q, k, v, repeats=repeats),
+    }
+
+    # Parity rail: valid-row forward + gradient agreement of the two paths.
+    out_x = xla_fwd_j(q, k, v)
+    out_f = flash_fwd_j(q, k, v)
+    fwd_err = float(jnp.max(jnp.abs((out_x - out_f) * valid)))
+    g_x = xla_bwd_j(q, k, v)
+    g_f = flash_bwd_j(q, k, v)
+    grad_err = max(
+        float(jnp.max(jnp.abs(a - b_))) for a, b_ in zip(g_x, g_f)
+    )
+
+    tiles = aggregate_census(by_width, census_block)
+    blocks = autotune_blocks(
+        b, s, h, kv, d, dtype=jnp.float32, causal=True, has_segments=True,
+        repeats=1,
+    )
+    return {
+        "backend": jax.default_backend(),
+        "profile": HIGH_CV_PROFILE,
+        "shape": {"rows": b, "seq": s, "heads": h, "kv_heads": kv, "head_dim": d},
+        "block": block,
+        "timings": timings,
+        "parity": {"fwd_max_err_valid": fwd_err, "grad_max_err": grad_err},
+        "live_tiles": tiles,
+        "skip_win": tiles["segment_live_fraction"] < tiles["causal_live_fraction"],
+        "autotune": {
+            "picked": list(blocks),
+            "key": shape_key(
+                b, s, h, kv, d, dtype=jnp.float32, causal=True, has_segments=True
+            ),
+            "schedule": {kk: list(vv) for kk, vv in cached_schedule().items()},
+        },
+    }
+
+
+def main(argv=None) -> list[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--data-scale", type=float, default=0.04)
+    ap.add_argument("--world", type=int, default=2)
+    ap.add_argument("--l-max", type=int, default=512)
+    ap.add_argument("--max-rows", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=512)
+    ap.add_argument("--census-block", type=int, default=64)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--head-dim", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    r = bench_kernels(
+        data_scale=args.data_scale,
+        world=args.world,
+        l_max=args.l_max,
+        max_rows=args.max_rows,
+        max_seq=args.max_seq,
+        census_block=args.census_block,
+        heads=args.heads,
+        kv_heads=args.kv_heads,
+        head_dim=args.head_dim,
+        repeats=args.repeats,
+    )
+    lines = [
+        csv_line(
+            "kernels/xla/fwd", 1e6 * r["timings"]["xla_fwd_s"],
+            {"seq": r["shape"]["seq"], "rows": r["shape"]["rows"]},
+        ),
+        csv_line(
+            "kernels/flash/fwd", 1e6 * r["timings"]["flash_fwd_s"],
+            {"block": r["block"]},
+        ),
+        csv_line(
+            "kernels/xla/fwdbwd", 1e6 * r["timings"]["xla_fwdbwd_s"], {}
+        ),
+        csv_line(
+            "kernels/flash/fwdbwd", 1e6 * r["timings"]["flash_fwdbwd_s"],
+            {"grad_err": f"{r['parity']['grad_max_err']:.2e}"},
+        ),
+        csv_line(
+            "kernels/live_tiles", 0.0,
+            {
+                "causal": f"{r['live_tiles']['causal_live_fraction']:.4f}",
+                "segment": f"{r['live_tiles']['segment_live_fraction']:.4f}",
+                "skip_win": int(r["skip_win"]),
+            },
+        ),
+    ]
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "kernels.json").write_text(json.dumps(r, indent=1))
+    # Top-level perf-trajectory artifact (ISSUE 3 acceptance contract).
+    pathlib.Path("BENCH_kernels.json").write_text(json.dumps(r, indent=1))
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in main():
+        print(line)

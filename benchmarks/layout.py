@@ -16,6 +16,11 @@ executes every step on CPU.  Reported per (length profile × layout):
 Profiles: ``longtail`` (high-CV — the acceptance profile: packed device-side
 padding must sit strictly below dense) and ``uniform_narrow`` (low-CV
 control).  Artifacts: ``<out>/layout.json`` + top-level ``BENCH_layout.json``.
+
+The measured core (``measure_loader``) doubles as the ``--layout auto``
+calibration probe: ``calibrate_layout`` runs a few real jitted steps of the
+*launch* dataset through each layout and picks the faster one
+(launch/train.py; ROADMAP "layout autotuning").
 """
 
 from __future__ import annotations
@@ -34,17 +39,16 @@ PROFILES = ("longtail", "uniform_narrow")
 HIGH_CV_PROFILE = "longtail"
 
 
-def bench_layout(
-    profile: str,
-    layout: str,
-    *,
-    data_scale: float,
-    world: int,
-    l_max: int,
-    max_steps: int,
-    vocab: int = 512,
-    seed: int = 0,
-) -> dict:
+def measure_loader(loader, *, max_steps: int, vocab: int = 512, arch: str = "qwen3_0_6b") -> dict:
+    """Measured steps/s + device padding for one prepared loader.
+
+    The shared probe core: realizes up to ``max_steps`` aligned steps through
+    the loader's layout, drives the real jitted ``make_train_step`` on a
+    smoke-scale model (one warmup per distinct global shape so XLA compiles
+    are excluded), and reports the timed pass.  Used both by the
+    paper-table benchmark below and by ``calibrate_layout`` (the
+    ``--layout auto`` calibration pass, ROADMAP "layout autotuning").
+    """
     import jax
 
     from repro.configs import get_smoke_config
@@ -52,24 +56,13 @@ def bench_layout(
     from repro.train.optimizer import OptimizerConfig, init_opt_state
     from repro.train.trainer import assemble_model_batch, make_train_step
 
-    ds = get_dataset(profile, scale=data_scale)
-    loader = OnlineDynamicLoader(
-        ds,
-        world_size=world,
-        config=OdbConfig(
-            l_max=l_max, buffer_size=64, prefetch_factor=32, num_workers=2
-        ),
-        layout=layout,
-        seed=seed,
-        vocab_size=vocab,
-    )
     steps = []
     for ls in loader.epoch(0):
         steps.append(ls)
         if len(steps) >= max_steps:
             break
 
-    cfg = dataclasses.replace(get_smoke_config("qwen3_0_6b"), vocab_size=vocab)
+    cfg = dataclasses.replace(get_smoke_config(arch), vocab_size=vocab)
     model = LM(cfg)
     opt_cfg = OptimizerConfig(total_steps=100)
     train_step = jax.jit(make_train_step(model, opt_cfg))
@@ -95,9 +88,7 @@ def bench_layout(
 
     acc = loader.accounting
     return {
-        "profile": profile,
-        "layout": layout,
-        "length_cv": round(length_cv(ds.lengths(seed)), 4),
+        "layout": loader.layout.name,
         "steps": len(steps),
         "real_tokens": acc.emitted_tokens,
         "device_tokens": acc.device_tokens,
@@ -109,6 +100,81 @@ def bench_layout(
         "tok_per_s": acc.emitted_tokens / wall if wall > 0 else 0.0,
         "final_loss": float(metrics["loss"]) if metrics is not None else None,
     }
+
+
+def bench_layout(
+    profile: str,
+    layout: str,
+    *,
+    data_scale: float,
+    world: int,
+    l_max: int,
+    max_steps: int,
+    vocab: int = 512,
+    seed: int = 0,
+) -> dict:
+    ds = get_dataset(profile, scale=data_scale)
+    loader = OnlineDynamicLoader(
+        ds,
+        world_size=world,
+        config=OdbConfig(
+            l_max=l_max, buffer_size=64, prefetch_factor=32, num_workers=2
+        ),
+        layout=layout,
+        seed=seed,
+        vocab_size=vocab,
+    )
+    row = measure_loader(loader, max_steps=max_steps, vocab=vocab)
+    row.update(
+        profile=profile,
+        layout=layout,
+        length_cv=round(length_cv(ds.lengths(seed)), 4),
+    )
+    return row
+
+
+def calibrate_layout(
+    dataset,
+    world: int,
+    config: OdbConfig,
+    *,
+    steps: int = 6,
+    vocab: int = 512,
+    seed: int = 0,
+    bucket_spec=None,
+    packed_spec=None,
+) -> dict:
+    """Pick dense vs packed for one run from a short measured probe.
+
+    ``--layout auto`` (launch/train.py): instead of trusting the CLI flag,
+    run a few real jitted steps of *this* dataset through each layout and
+    keep the one with the higher measured steps/s (ties break toward lower
+    device-side padding).  The caller's bucket grids must be passed through
+    (``bucket_spec``/``packed_spec``) so the probe pads on exactly the
+    boundaries the real run will — a different grid can rank the layouts
+    differently.  The probe model is smoke-scale by design: the decision is
+    a *relative* ranking, not an absolute throughput estimate.  Returns
+    ``{"layout": choice, "results": {...}}``.
+    """
+    results = {}
+    for layout in ("dense", "packed"):
+        loader = OnlineDynamicLoader(
+            dataset,
+            world_size=world,
+            config=config,
+            bucket_spec=bucket_spec,
+            packed_spec=packed_spec,
+            layout=layout,
+            seed=seed,
+            vocab_size=vocab,
+        )
+        results[layout] = measure_loader(loader, max_steps=steps, vocab=vocab)
+    dense, packed = results["dense"], results["packed"]
+    if packed["steps_per_s"] != dense["steps_per_s"]:
+        choice = max(results, key=lambda k: results[k]["steps_per_s"])
+    else:
+        choice = min(results, key=lambda k: results[k]["device_padding_fraction"])
+    return {"layout": choice, "results": results}
 
 
 def main(argv=None) -> list[str]:

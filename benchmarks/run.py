@@ -12,6 +12,9 @@ under ``artifacts/bench/``.
                        (emits BENCH_streaming.json; also `run.py --streaming`)
   layout             — measured dense vs packed batch layouts on real jitted
                        steps (emits BENCH_layout.json; also `run.py --layout`)
+  kernels            — XLA blockwise vs Pallas flash fwd/bwd on packed rows +
+                       live-tile census under segment-aware block skipping
+                       (emits BENCH_kernels.json; also `run.py --kernels`)
 
 Select one module by name (``run.py streaming``) or flag (``run.py
 --streaming``); no argument runs everything.
@@ -27,6 +30,7 @@ def main() -> None:
     from benchmarks import (
         ablations,
         join_and_scaling,
+        kernels,
         layout,
         protocol_audit,
         roofline_bench,
@@ -42,6 +46,7 @@ def main() -> None:
         ("roofline", roofline_bench),
         ("streaming", streaming),
         ("layout", layout),
+        ("kernels", kernels),
     ]
     only = sys.argv[1].lstrip("-") if len(sys.argv) > 1 else None
     names = [name for name, _ in modules]

@@ -128,7 +128,10 @@ class RankRuntime:
         self.pending: collections.deque[Sample] = collections.deque(views)  # R
         self.worker_queue: collections.deque[Sample] = collections.deque()  # Q
         self.buffer: list[Sample] = []  # B
-        self.emitted: list[Sample] = []  # E
+        # E is conservation-counted, not stored: emitted views never re-enter
+        # the machine, and identity coverage lives in EpochRunner.emitted_ids
+        # — so the ledger (and its serialized form) is O(1), not O(quota).
+        self.emitted_count: int = 0  # |E|
         self.out_queue: collections.deque[Group | None] = collections.deque()
         self.counters = RankCounters()
         self.local_finished = False
@@ -142,7 +145,7 @@ class RankRuntime:
             len(self.pending),
             len(self.worker_queue),
             len(self.buffer),
-            len(self.emitted),
+            self.emitted_count,
         )
 
     @property
@@ -239,7 +242,7 @@ class RankRuntime:
         emitted_view_ids = set()
         for group in result.groups:
             self.out_queue.append(group)
-            self.emitted.extend(group.samples)
+            self.emitted_count += group.size
             emitted_view_ids.update(s.view_id for s in group.samples)
             emitted_now += 1
             self.counters.emitted_groups += 1
@@ -454,7 +457,7 @@ class OdbProtocolEngine:
     def run_iteration(self) -> IterationResult:
         """Run rounds until the mode-specific termination predicate fires."""
         start_round = self._round_index
-        emitted_start = sum(len(r.emitted) for r in self.ranks)
+        emitted_start = sum(r.emitted_count for r in self.ranks)
         terminated_by = ""
         while True:
             if self._round_index - start_round > self.max_rounds:
@@ -473,7 +476,7 @@ class OdbProtocolEngine:
                     terminated_by = "nonjoin_any_finished"
                     break
         abandoned = sum(r.outstanding for r in self.ranks)
-        emitted = sum(len(r.emitted) for r in self.ranks) - emitted_start
+        emitted = sum(r.emitted_count for r in self.ranks) - emitted_start
         return IterationResult(
             rounds=self._round_index - start_round,
             emitted_views=emitted,

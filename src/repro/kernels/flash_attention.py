@@ -1,20 +1,49 @@
-"""Segment-aware causal flash attention — Pallas TPU kernel.
+"""Segment-aware causal flash attention — Pallas TPU kernels (fwd + bwd).
 
-TPU-native adaptation of the paper's packing story (DESIGN.md §2): ODB's
+TPU-native adaptation of the paper's packing story (DESIGN.md §2, §11): ODB's
 packed groups need contamination-free attention; on GPU that is a varlen
 CUDA kernel (flash_attn_varlen), on TPU the natural form is *segment-id
 masking fused into a tiled attention kernel*.
 
-Tiling: grid = (batch, q_heads, num_q_blocks, num_kv_blocks), the last axis
-sequential (TPU "arbitrary" dimension semantics) carrying the online-softmax
-accumulators (m, l, acc) in VMEM scratch.  BlockSpecs pull one (block_q × d)
-query tile and one (block_kv × d) key/value tile into VMEM per step; GQA is
-expressed in the k/v index_map (kv head = q head // group).  Causally dead
-(q, kv) block pairs are skipped via ``pl.when``.
+Forward tiling: grid = (batch, q_heads, num_q_blocks, num_kv_blocks), the
+last axis sequential (TPU "arbitrary" dimension semantics) carrying the
+online-softmax accumulators (m, l, acc) in VMEM scratch.  BlockSpecs pull one
+(block_q × d) query tile and one (block_kv × d) key/value tile into VMEM per
+step; GQA is expressed in the k/v index_map (kv head = q head // group).
 
-Backward: exposed through ``jax.custom_vjp`` in ops.py with the pure-jnp
-reference as the recompute path — the forward kernel is the perf-critical
-piece (prefill / packed-batch forward).
+Block skipping: causally dead (q, kv) block pairs are skipped via
+``pl.when``, and — with packed rows — so are *segment-disjoint* pairs.
+Segment ids within a packed row are nondecreasing over the real prefix (the
+padding tail carries 0), so each block covers a contiguous id range
+``[lo, hi]``; a (q, kv) pair is live only when the ranges overlap:
+``q_hi >= k_lo and k_hi >= q_lo`` (ids 0 excluded).  Packing therefore turns
+directly into proportionally fewer live tiles (measured by
+benchmarks/kernels.py as the live-tile fraction).
+
+Backward: the standard recompute-free two-pass formulation.  The forward
+saves per-row ``lse = m + log(l)``; the backward recomputes probabilities as
+``p = exp(s - lse)`` tile by tile (never materializing O(S²)), with
+
+    delta = rowsum(dO ⊙ O)            (precomputed outside the kernels)
+    dV   += Pᵀ · dO                   (kv-stationary pass)
+    dS    = P ⊙ (dO·Vᵀ − delta)
+    dK   += scale · dSᵀ · Q           (kv-stationary pass)
+    dQ   += scale · dS · K            (q-stationary pass)
+
+Two kernels: a q-stationary pass (grid (b, h, nq, nk), kv sequential)
+accumulating dQ, and a kv-stationary pass (grid (b, kv, nk, g·nq), the
+sequential axis walking every (group member, q block) pair of one kv tile)
+whose VMEM scratch accumulates the GQA group-sum in place — dK/dV leave the
+kernel at kv-head resolution, with no per-q-head HBM intermediates.  Both
+share the
+masking contract — allowed iff segments match (0 = padding) and (causal ⇒
+k_pos ≤ q_pos) — and the same block skipping, and rows whose softmax mass is
+empty (l == 0, all-padding rows) contribute exactly zero gradient because
+``p`` is built under the mask.
+
+Block sizes need not divide S: ``select_block`` drops to the largest
+divisor ≤ 128 (ragged sequence cells degrade gracefully instead of
+asserting).
 """
 
 from __future__ import annotations
@@ -43,10 +72,72 @@ except Exception:  # pragma: no cover
         return None
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+_SEG_BIG = 1 << 30  # "no positive segment in this block" sentinel
+
+
+def select_block(s: int, requested: int, cap: int = 128) -> int:
+    """Largest block ≤ min(requested, cap) that divides ``s``.
+
+    Keeps the kernel grid exact for ragged sequence cells instead of
+    asserting ``s % block == 0``.  Divisors that are multiples of 8 (the
+    fp32 sublane) are preferred so the compiled TPU path keeps
+    Mosaic-legal tile shapes: 384 → 128, 200 → 40 (not 100), 96 → 96.
+    Shapes with no aligned divisor (e.g. prime S) fall back to the largest
+    divisor of any width — interpret-mode territory.
+    """
+    b = min(requested, cap, s)
+    unaligned = 1
+    for c in range(b, 0, -1):
+        if s % c:
+            continue
+        if c % 8 == 0:
+            return c
+        if unaligned == 1:
+            unaligned = c
+    return unaligned
+
+
+def _block_live(causal, qb, kb, block_q, block_kv, qseg_ref, kseg_ref):
+    """Scalar liveness of one (q, kv) block pair: causal reach AND (for
+    packed rows) overlapping per-block segment-id ranges."""
+    live = qb * block_q + block_q - 1 >= kb * block_kv if causal else True
+    if qseg_ref is not None:
+        qseg = qseg_ref[...]
+        kseg = kseg_ref[...]
+        q_lo = jnp.min(jnp.where(qseg > 0, qseg, _SEG_BIG))
+        k_lo = jnp.min(jnp.where(kseg > 0, kseg, _SEG_BIG))
+        q_hi = jnp.max(qseg)
+        k_hi = jnp.max(kseg)
+        seg_live = (q_hi > 0) & (k_hi > 0) & (q_hi >= k_lo) & (k_hi >= q_lo)
+        live = seg_live if live is True else live & seg_live
+    return live
+
+
+def _tile_mask(qb, kb, block_q, block_kv, causal, qseg_ref, kseg_ref):
+    """(block_q, block_kv) boolean allow-mask — the shared contract."""
+    allowed = jnp.ones((block_q, block_kv), dtype=jnp.bool_)
+    if causal:
+        q_pos = qb * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0
+        )
+        k_pos = kb * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1
+        )
+        allowed &= k_pos <= q_pos
+    if qseg_ref is not None:
+        qseg = qseg_ref[...]
+        kseg = kseg_ref[...]
+        allowed &= (qseg[:, None] == kseg[None, :]) & (kseg[None, :] > 0)
+    return allowed
+
+
+# -----------------------------------------------------------------------------
+# Forward
+# -----------------------------------------------------------------------------
 
 
 def _flash_body(
-    q_ref, k_ref, v_ref, qseg_ref, kseg_ref, o_ref,
+    q_ref, k_ref, v_ref, qseg_ref, kseg_ref, o_ref, lse_ref,
     m_scratch, l_scratch, acc_scratch,
     *, scale, causal, block_q, block_kv, num_kv_blocks,
 ):
@@ -59,10 +150,7 @@ def _flash_body(
         l_scratch[...] = jnp.zeros_like(l_scratch[...])
         acc_scratch[...] = jnp.zeros_like(acc_scratch[...])
 
-    if causal:
-        live = qb * block_q + block_q - 1 >= kb * block_kv
-    else:
-        live = True
+    live = _block_live(causal, qb, kb, block_q, block_kv, qseg_ref, kseg_ref)
 
     @pl.when(live)
     def _compute():
@@ -70,20 +158,7 @@ def _flash_body(
         k = k_ref[...].astype(jnp.float32)
         v = v_ref[...].astype(jnp.float32)
         scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-
-        q_pos = qb * block_q + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_kv), 0
-        )
-        k_pos = kb * block_kv + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_kv), 1
-        )
-        allowed = jnp.ones((block_q, block_kv), dtype=jnp.bool_)
-        if causal:
-            allowed &= k_pos <= q_pos
-        if qseg_ref is not None:
-            qseg = qseg_ref[...]
-            kseg = kseg_ref[...]
-            allowed &= (qseg[:, None] == kseg[None, :]) & (kseg[None, :] > 0)
+        allowed = _tile_mask(qb, kb, block_q, block_kv, causal, qseg_ref, kseg_ref)
         scores = jnp.where(allowed, scores, NEG_INF)
 
         m_prev = m_scratch[:, 0]
@@ -105,6 +180,10 @@ def _flash_body(
         l = l_scratch[:, 0]
         denom = jnp.where(l == 0.0, 1.0, l)
         o_ref[...] = (acc_scratch[...] / denom[:, None]).astype(o_ref.dtype)
+        if lse_ref is not None:
+            m = m_scratch[:, 0]
+            lse = jnp.where(l > 0.0, m + jnp.log(denom), NEG_INF)
+            lse_ref[...] = lse.astype(lse_ref.dtype)
 
 
 def segment_flash_attention(
@@ -118,15 +197,17 @@ def segment_flash_attention(
     block_q: int = 128,
     block_kv: int = 128,
     interpret: bool = False,
-) -> jax.Array:
+    return_residuals: bool = False,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
+    """Forward kernel; with ``return_residuals`` also emits per-row
+    ``lse = m + log(l)`` of shape (B, S, H) for the backward pass."""
     b, s, h, d = q.shape
     kv = k.shape[2]
     assert h % kv == 0, (h, kv)
     g = h // kv
     scale = scale if scale is not None else 1.0 / (d**0.5)
-    block_q = min(block_q, s)
-    block_kv = min(block_kv, s)
-    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    block_q = select_block(s, block_q)
+    block_kv = select_block(s, block_kv)
     nq, nk = s // block_q, s // block_kv
     grid = (b, h, nq, nk)
 
@@ -154,12 +235,30 @@ def segment_flash_attention(
         block_kv=block_kv, num_kv_blocks=nk,
     )
 
-    if has_seg:
+    out_shape: object = jax.ShapeDtypeStruct(q.shape, q.dtype)
+    out_specs: object = o_spec
+    if return_residuals:
+        out_shape = (
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, s, h), jnp.float32),
+        )
+        out_specs = (
+            o_spec,
+            pl.BlockSpec((None, block_q, None), lambda ib, ih, iq, ik: (ib, iq, ih)),
+        )
+
+    if has_seg and return_residuals:
+        def kernel(q_ref, k_ref, v_ref, qs, ks, o_ref, lse_ref, m, l, acc):
+            body(q_ref, k_ref, v_ref, qs, ks, o_ref, lse_ref, m, l, acc)
+    elif has_seg:
         def kernel(q_ref, k_ref, v_ref, qs, ks, o_ref, m, l, acc):
-            body(q_ref, k_ref, v_ref, qs, ks, o_ref, m, l, acc)
+            body(q_ref, k_ref, v_ref, qs, ks, o_ref, None, m, l, acc)
+    elif return_residuals:
+        def kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m, l, acc):
+            body(q_ref, k_ref, v_ref, None, None, o_ref, lse_ref, m, l, acc)
     else:
         def kernel(q_ref, k_ref, v_ref, o_ref, m, l, acc):
-            body(q_ref, k_ref, v_ref, None, None, o_ref, m, l, acc)
+            body(q_ref, k_ref, v_ref, None, None, o_ref, None, m, l, acc)
 
     scratch = [
         _VMEM((block_q, 128), jnp.float32),
@@ -174,9 +273,285 @@ def segment_flash_attention(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=o_spec,
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
         **kwargs,
     )(*args)
+
+
+# -----------------------------------------------------------------------------
+# Backward
+# -----------------------------------------------------------------------------
+
+
+def _recompute_p_ds(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+    *, scale, causal, block_q, block_kv, qb, kb,
+):
+    """Shared tile recompute: (p, ds) from the saved (lse, delta) residuals.
+
+    ``p`` is assembled under the allow-mask, so fully-masked rows (the
+    packed layout's l == 0 padding rows, whose saved lse is the NEG_INF
+    sentinel) produce an all-zero tile rather than NaN/Inf.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    allowed = _tile_mask(qb, kb, block_q, block_kv, causal, qseg_ref, kseg_ref)
+    lse = lse_ref[...].astype(jnp.float32)
+    p = jnp.where(allowed, jnp.exp(scores - lse[:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    delta = delta_ref[...].astype(jnp.float32)
+    ds = p * (dp - delta[:, None])
+    return q, k, do, p, ds
+
+
+def _bwd_dq_body(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+    dq_ref, dq_scratch,
+    *, scale, causal, block_q, block_kv, num_kv_blocks,
+):
+    """q-stationary pass: dQ = scale · Σ_kv dS · K."""
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        dq_scratch[...] = jnp.zeros_like(dq_scratch[...])
+
+    live = _block_live(causal, qb, kb, block_q, block_kv, qseg_ref, kseg_ref)
+
+    @pl.when(live)
+    def _compute():
+        _, k, _, _, ds = _recompute_p_ds(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+            scale=scale, causal=causal, block_q=block_q, block_kv=block_kv,
+            qb=qb, kb=kb,
+        )
+        dq_scratch[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ()))
+        ) * scale
+
+    @pl.when(kb == num_kv_blocks - 1)
+    def _finalize():
+        dq_ref[...] = dq_scratch[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_body(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+    dk_ref, dv_ref, dk_scratch, dv_scratch,
+    *, scale, causal, block_q, block_kv, num_q_blocks, group,
+):
+    """kv-stationary pass: dK = scale · Σ dSᵀ · Q, dV = Σ Pᵀ · dO.
+
+    The sequential grid axis runs over (group member, q block) pairs —
+    ``group · num_q_blocks`` steps per kv tile — so the GQA group-sum
+    accumulates in the same VMEM scratch and the outputs land at kv-head
+    resolution directly (no (B, S, H, D) per-q-head intermediates in HBM).
+    """
+    kb = pl.program_id(2)
+    t = pl.program_id(3)
+    qb = t % num_q_blocks
+
+    @pl.when(t == 0)
+    def _init():
+        dk_scratch[...] = jnp.zeros_like(dk_scratch[...])
+        dv_scratch[...] = jnp.zeros_like(dv_scratch[...])
+
+    live = _block_live(causal, qb, kb, block_q, block_kv, qseg_ref, kseg_ref)
+
+    @pl.when(live)
+    def _compute():
+        q, _, do, p, ds = _recompute_p_ds(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+            scale=scale, causal=causal, block_q=block_q, block_kv=block_kv,
+            qb=qb, kb=kb,
+        )
+        dv_scratch[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+        dk_scratch[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ()))
+        ) * scale
+
+    @pl.when(t == group * num_q_blocks - 1)
+    def _finalize():
+        dk_ref[...] = dk_scratch[...].astype(dk_ref.dtype)
+        dv_ref[...] = dv_scratch[...].astype(dv_ref.dtype)
+
+
+def segment_flash_attention_bwd(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    segment_ids: jax.Array | None,
+    out: jax.Array,  # (B, S, H, D) — forward output
+    lse: jax.Array,  # (B, S, H) fp32 — forward log-sum-exp residual
+    do: jax.Array,  # (B, S, H, D) — cotangent of out
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Tiled two-pass backward: returns (dq, dk, dv) without ever
+    materializing the (S × S) probability matrix."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    block_q = select_block(s, block_q)
+    block_kv = select_block(s, block_kv)
+    nq, nk = s // block_q, s // block_kv
+
+    # delta_i = Σ_d dO ⊙ O — one cheap rowwise pass outside the kernels.
+    delta = jnp.sum(
+        do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1
+    )  # (B, S, H)
+
+    has_seg = segment_ids is not None
+
+    def specs(at):
+        """The six shared tensor specs under one grid→(ib, ih, iq, ik) map."""
+        q_spec = pl.BlockSpec(
+            (None, block_q, None, d), at(lambda ib, ih, iq, ik: (ib, iq, ih, 0))
+        )
+        kv_spec = pl.BlockSpec(
+            (None, block_kv, None, d), at(lambda ib, ih, iq, ik: (ib, ik, ih // g, 0))
+        )
+        row_spec = pl.BlockSpec(
+            (None, block_q, None), at(lambda ib, ih, iq, ik: (ib, iq, ih))
+        )
+        seg_specs = []
+        if has_seg:
+            seg_specs = [
+                pl.BlockSpec((None, block_q), at(lambda ib, ih, iq, ik: (ib, iq))),
+                pl.BlockSpec((None, block_kv), at(lambda ib, ih, iq, ik: (ib, ik))),
+            ]
+        return [q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec] + seg_specs
+
+    args = [q, k, v, do, lse, delta]
+    if has_seg:
+        args.extend([segment_ids, segment_ids])
+
+    kwargs = {}
+    cp = _compiler_params()
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+
+    # -- pass 1: q-stationary dQ ---------------------------------------------
+    dq_body = functools.partial(
+        _bwd_dq_body,
+        scale=scale, causal=causal, block_q=block_q, block_kv=block_kv,
+        num_kv_blocks=nk,
+    )
+    if has_seg:
+        def dq_kernel(qr, kr, vr, dor, lser, dr, qs, ks, dqr, acc):
+            dq_body(qr, kr, vr, dor, lser, dr, qs, ks, dqr, acc)
+    else:
+        def dq_kernel(qr, kr, vr, dor, lser, dr, dqr, acc):
+            dq_body(qr, kr, vr, dor, lser, dr, None, None, dqr, acc)
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(b, h, nq, nk),
+        in_specs=specs(lambda fn: fn),
+        out_specs=pl.BlockSpec(
+            (None, block_q, None, d), lambda ib, ih, iq, ik: (ib, iq, ih, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[_VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(*args)
+
+    # -- pass 2: kv-stationary dK/dV -----------------------------------------
+    # Grid (b, kv_heads, nk, g·nq): the sequential axis walks every
+    # (group member, q block) pair of one kv tile, so the GQA group-sum
+    # accumulates in scratch and the outputs are kv-head resolution —
+    # no (B, S, H, D) per-q-head intermediates in HBM.
+    def dkv_at(fn):
+        return lambda ib, ikv, ik, t: fn(
+            ib, ikv * g + t // nq, t % nq, ik
+        )
+
+    dkv_body = functools.partial(
+        _bwd_dkv_body,
+        scale=scale, causal=causal, block_q=block_q, block_kv=block_kv,
+        num_q_blocks=nq, group=g,
+    )
+    if has_seg:
+        def dkv_kernel(qr, kr, vr, dor, lser, dr, qs, ks, dkr, dvr, ka, va):
+            dkv_body(qr, kr, vr, dor, lser, dr, qs, ks, dkr, dvr, ka, va)
+    else:
+        def dkv_kernel(qr, kr, vr, dor, lser, dr, dkr, dvr, ka, va):
+            dkv_body(qr, kr, vr, dor, lser, dr, None, None, dkr, dvr, ka, va)
+    kv_out_spec = pl.BlockSpec(
+        (None, block_kv, None, d), lambda ib, ikv, ik, t: (ib, ik, ikv, 0)
+    )
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(b, kv, nk, g * nq),
+        in_specs=specs(dkv_at),
+        out_specs=(kv_out_spec, kv_out_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ),
+        scratch_shapes=[
+            _VMEM((block_kv, d), jnp.float32),
+            _VMEM((block_kv, d), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(*args)
+    return dq, dk, dv
+
+
+def live_tile_counts(
+    segment_ids, s: int, block_q: int, block_kv: int, causal: bool = True
+) -> dict:
+    """Host-side mirror of the kernel's block-skip rule (benchmarks/tests).
+
+    Counts (row, q-block, kv-block) tiles that survive (a) the causal skip
+    alone and (b) causal + segment-range skipping, for a (B, S) segment-id
+    array.  Pure numpy; mirrors ``_block_live`` exactly.
+    """
+    import numpy as np
+
+    seg = np.asarray(segment_ids)
+    bsz = seg.shape[0]
+    block_q = select_block(s, block_q)
+    block_kv = select_block(s, block_kv)
+    nq, nk = s // block_q, s // block_kv
+    total = bsz * nq * nk
+    causal_live = 0
+    seg_live = 0
+    for i in range(bsz):
+        for qb in range(nq):
+            qs = seg[i, qb * block_q : (qb + 1) * block_q]
+            q_pos = qs[qs > 0]
+            for kb in range(nk):
+                if causal and qb * block_q + block_q - 1 < kb * block_kv:
+                    continue
+                causal_live += 1
+                ks = seg[i, kb * block_kv : (kb + 1) * block_kv]
+                k_pos = ks[ks > 0]
+                if (
+                    q_pos.size
+                    and k_pos.size
+                    and q_pos.max() >= k_pos.min()
+                    and k_pos.max() >= q_pos.min()
+                ):
+                    seg_live += 1
+    return {
+        "tiles": total,
+        "block_q": block_q,
+        "block_kv": block_kv,
+        "causal_live": causal_live,
+        "segment_live": seg_live,
+        "causal_live_fraction": causal_live / total if total else 0.0,
+        "segment_live_fraction": seg_live / total if total else 0.0,
+    }

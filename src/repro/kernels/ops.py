@@ -2,10 +2,12 @@
 
 On CPU (this container) the kernels execute under ``interpret=True``; on TPU
 they compile through Mosaic.  ``flash_attention`` carries a ``custom_vjp``
-whose backward recomputes through the pure-jnp reference — forward is the
-perf-critical path (prefill / packed-batch serving), and the recompute
-backward keeps training numerically exact while the dedicated bwd kernel is
-out of scope.
+whose backward runs the dedicated Pallas dq/dkv kernels
+(:func:`~repro.kernels.flash_attention.segment_flash_attention_bwd`) from the
+saved ``(q, k, v, out, lse)`` residuals — the recompute-free two-pass
+formulation, so the training backward never round-trips through the O(S²)
+jnp reference (``kernels/ref.py`` remains the allclose oracle for tests
+only).
 """
 
 from __future__ import annotations
@@ -15,8 +17,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
-from repro.kernels.flash_attention import segment_flash_attention
+from repro.kernels.flash_attention import (
+    segment_flash_attention,
+    segment_flash_attention_bwd,
+)
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -33,19 +37,20 @@ def flash_attention(q, k, v, segment_ids=None, causal=True, block_q=128, block_k
 
 
 def _flash_fwd(q, k, v, segment_ids, causal, block_q, block_kv):
-    out = flash_attention(q, k, v, segment_ids, causal, block_q, block_kv)
-    return out, (q, k, v, segment_ids)
+    out, lse = segment_flash_attention(
+        q, k, v, segment_ids,
+        causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=_on_cpu(), return_residuals=True,
+    )
+    return out, (q, k, v, segment_ids, out, lse)
 
 
 def _flash_bwd(causal, block_q, block_kv, res, g):
-    q, k, v, segment_ids = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _ref.segment_flash_attention_ref(
-            q_, k_, v_, segment_ids, causal=causal
-        ),
-        q, k, v,
+    q, k, v, segment_ids, out, lse = res
+    dq, dk, dv = segment_flash_attention_bwd(
+        q, k, v, segment_ids, out, lse, g,
+        causal=causal, block_q=block_q, block_kv=block_kv, interpret=_on_cpu(),
     )
-    dq, dk, dv = vjp(g)
     return dq, dk, dv, None
 
 

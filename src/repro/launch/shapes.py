@@ -20,13 +20,20 @@ class ShapeCell:
     global_batch: int
     kind: str  # "train" | "prefill" | "decode"
     layout: str = "dense"  # batch layout of train cells (DESIGN.md §10)
+    # Preferred attention route for this cell (DESIGN.md §11).  "flash" is a
+    # preference, not a pin: launch/steps resolves it against the backend,
+    # so CPU dry-runs still lower the XLA blockwise path.
+    attn_impl: str = "auto"
 
 
 SHAPES = {
     "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
     # Packed layout: same 4k row capacity, fewer rows (each row carries
-    # ~row_capacity real tokens instead of one right-padded sample).
-    "train_4k_packed": ShapeCell("train_4k_packed", 4096, 64, "train", layout="packed"),
+    # ~row_capacity real tokens instead of one right-padded sample); routed
+    # through the Pallas flash kernel when the backend compiles it.
+    "train_4k_packed": ShapeCell(
+        "train_4k_packed", 4096, 64, "train", layout="packed", attn_impl="flash"
+    ),
     "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
     "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),

@@ -28,9 +28,27 @@ from repro.train.optimizer import OptimizerConfig, init_opt_state
 
 # The canonical train step lives with the trainer (shared builder: what the
 # dry-run lowers here is exactly what the deployment trainer jits).
-from repro.train.trainer import make_train_step  # noqa: F401
+from repro.train.trainer import make_train_step, resolve_attn_impl  # noqa: F401
 
 Params = Any
+
+
+def _route_cell_model(model: LM, cell: ShapeCell) -> LM:
+    """Pin the cell's preferred attention route (DESIGN.md §11).
+
+    Cells with ``attn_impl="flash"`` (the packed train cells) compile the
+    Pallas kernel on TPU; off-TPU the resolution falls back to the XLA
+    blockwise path so CPU dry-runs stay on the interpretable route.  An
+    explicit route already pinned on the model config wins.
+    """
+    cfg = model.cfg
+    if cell.kind != "train" or cfg.attn_impl != "auto":
+        return model
+    packed = cell.layout == "packed" or cell.attn_impl == "flash"
+    impl = resolve_attn_impl(cfg, packed=packed)
+    if impl == cfg.attn_impl:
+        return model
+    return dataclasses.replace(model, cfg=dataclasses.replace(cfg, attn_impl=impl))
 
 
 def abstract_train_state(model: LM, opt_cfg: OptimizerConfig):
@@ -49,6 +67,7 @@ def train_state_specs(state_shapes, model: LM, mesh):
 
 def build_train_step(model: LM, mesh, cell: ShapeCell, opt_cfg=None):
     opt_cfg = opt_cfg or OptimizerConfig()
+    model = _route_cell_model(model, cell)
     state_shapes = abstract_train_state(model, opt_cfg)
     batch_shapes = train_batch_specs(model.cfg, cell)
     state_specs = train_state_specs(state_shapes, model, mesh)

@@ -14,6 +14,7 @@ step — see tests/test_protocol.py::test_straggler_liveness).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 
@@ -23,6 +24,32 @@ from repro.data import OnlineDynamicLoader, get_dataset
 from repro.models import LM
 from repro.train.optimizer import OptimizerConfig
 from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _calibrate_layout(
+    dataset, world: int, config: OdbConfig, steps: int, bucket_spec: BucketSpec
+) -> str:
+    """--layout auto: measured dense-vs-packed probe (benchmarks/layout.py)."""
+    try:
+        from benchmarks.layout import calibrate_layout
+    except ImportError:  # benchmarks namespace lives at the repo root
+        import pathlib
+        import sys
+
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[3]))
+        from benchmarks.layout import calibrate_layout
+
+    cal = calibrate_layout(
+        dataset, world, config, steps=steps, bucket_spec=bucket_spec
+    )
+    rows = cal["results"]
+    for name, r in rows.items():
+        print(
+            f"[train] calibrate {name}: {r['steps_per_s']:.2f} steps/s  "
+            f"dev-pad {100 * r['device_padding_fraction']:.2f}%"
+        )
+    print(f"[train] layout auto -> {cal['layout']}")
+    return cal["layout"]
 
 
 def main() -> None:
@@ -52,9 +79,24 @@ def main() -> None:
     ap.add_argument("--no-prefetch", action="store_true")
     ap.add_argument("--prefetch-depth", type=int, default=2)
     ap.add_argument(
-        "--layout", default="dense", choices=("dense", "packed"),
-        help="batch layout: dense bucket padding or packed segment streams "
-             "(DESIGN.md §10)",
+        "--layout", default="dense", choices=("dense", "packed", "auto"),
+        help="batch layout: dense bucket padding, packed segment streams "
+             "(DESIGN.md §10), or auto — a short measured calibration probe "
+             "picks the faster layout for this dataset profile",
+    )
+    ap.add_argument(
+        "--calibration-steps", type=int, default=6,
+        help="measured steps per layout for --layout auto",
+    )
+    ap.add_argument(
+        "--attn-impl", default="auto", choices=("auto", "xla", "flash"),
+        help="training attention route (DESIGN.md §11): XLA blockwise, the "
+             "Pallas flash kernel, or auto (flash when packed on TPU)",
+    )
+    ap.add_argument(
+        "--attn-autotune", action="store_true",
+        help="pick the flash kernel's (block_q, block_kv) per shape cell "
+             "from a short measured probe (cached under artifacts/autotune/)",
     )
     ap.add_argument(
         "--device-put", action="store_true",
@@ -64,17 +106,28 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(
+        cfg, attn_impl=args.attn_impl, attn_autotune=args.attn_autotune
+    )
     model = LM(cfg)
+    dataset = get_dataset(args.dataset, scale=args.data_scale)
+    odb_cfg = OdbConfig(
+        l_max=args.l_max, buffer_size=args.buffer,
+        prefetch_factor=args.prefetch, num_workers=4,
+        join_mode=not args.non_join,
+    )
+    bucket_spec = BucketSpec(min_len=128, max_len=16384, max_count=1024)
+    layout = args.layout
+    if layout == "auto":
+        layout = _calibrate_layout(
+            dataset, args.world, odb_cfg, args.calibration_steps, bucket_spec
+        )
     loader = OnlineDynamicLoader(
-        get_dataset(args.dataset, scale=args.data_scale),
+        dataset,
         world_size=args.world,
-        config=OdbConfig(
-            l_max=args.l_max, buffer_size=args.buffer,
-            prefetch_factor=args.prefetch, num_workers=4,
-            join_mode=not args.non_join,
-        ),
-        bucket_spec=BucketSpec(min_len=128, max_len=16384, max_count=1024),
-        layout=args.layout,
+        config=odb_cfg,
+        bucket_spec=bucket_spec,
+        layout=layout,
         vocab_size=cfg.vocab_size,
     )
     trainer = Trainer(
@@ -106,6 +159,7 @@ def main() -> None:
             if restarts > args.max_restarts or not args.checkpoint_dir:
                 raise
 
+    print(f"[train] layout={layout} attn_impl={trainer.attn_impl}")
     for h in trainer.history[-10:]:
         print(
             f"step {h['step']:>5}  loss {h['loss']:.4f}  sam/s {h['sam_per_s']:.2f}  "

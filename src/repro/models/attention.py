@@ -1,8 +1,12 @@
 """Attention: GQA/MQA/MHA + MLA (DeepSeek-V3), KV caches, segment masking.
 
-Pure-jnp (XLA) path — used for training, prefill and the sharded dry-run.
-The Pallas segment-aware flash kernel in ``repro.kernels`` implements the
-same contract for the packed-batch backend (validated against ``ref.py``).
+Two train/prefill implementations behind one entry point (DESIGN.md §11):
+the pure-jnp (XLA) blockwise path below, and the Pallas segment-aware flash
+kernel in ``repro.kernels`` (fused forward + tiled two-pass backward, same
+masking contract, validated against ``ref.py``).  ``use_flash_attention``
+routes between them from ``ArchConfig.attn_impl`` — "auto" takes the kernel
+exactly when the batch is packed and the backend compiles Pallas (TPU); the
+decode/cache path and MLA always use XLA.
 
 Memory design: scores are never materialized at (S_q × S_k).  Queries are
 processed in blocks via ``lax.scan`` with the mask computed per block from
@@ -113,6 +117,52 @@ def _pick_block(s: int, preferred: int = 256) -> int:
 
 
 # ------------------------------------------------------------------------------
+# Kernel routing (DESIGN.md §11): XLA blockwise vs Pallas flash
+# ------------------------------------------------------------------------------
+
+
+def use_flash_attention(cfg, segments, cache) -> bool:
+    """Route this call through the Pallas segment-aware flash kernel?
+
+    Structural gates first: only GQA-layout attention without a KV cache
+    (train / full-sequence forward) matches the kernel contract.  Then the
+    ``attn_impl`` policy: "flash" forces the kernel (interpret mode off-TPU —
+    the tests' path), "xla" forces the blockwise-scan path, "auto" picks the
+    kernel exactly when the batch is packed (explicit segments, where the
+    kernel's segment-range block skipping pays) and the backend compiles
+    Pallas (TPU).
+    """
+    if cache is not None:
+        return False
+    impl = getattr(cfg, "attn_impl", "xla")
+    if impl == "flash":
+        return True
+    if impl == "auto":
+        return segments is not None and jax.default_backend() == "tpu"
+    return False
+
+
+def _flash_blocks(cfg, s: int, b: int, h: int, kv: int, dh: int, dtype, has_segments):
+    """Resolve the (block_q, block_kv) schedule for one shape cell."""
+    from repro.kernels.autotune import autotune_blocks, heuristic_blocks
+    from repro.kernels.flash_attention import select_block
+
+    if cfg.attn_block_q or cfg.attn_block_kv:
+        # Partial pins are honored: the unset side falls back to the
+        # heuristic width rather than dropping the explicit one.
+        return (
+            select_block(s, cfg.attn_block_q or 128),
+            select_block(s, cfg.attn_block_kv or 128),
+        )
+    if cfg.attn_autotune:
+        return autotune_blocks(
+            b, s, h, kv, dh,
+            dtype=dtype, causal=cfg.causal, has_segments=has_segments,
+        )
+    return heuristic_blocks(s)
+
+
+# ------------------------------------------------------------------------------
 # Blockwise SDPA (GQA layout)
 # ------------------------------------------------------------------------------
 
@@ -214,6 +264,21 @@ def gqa_attention(
         k = rms_norm(k, params["k_norm"])
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+
+    if use_flash_attention(cfg, segments, cache):
+        # Pallas fused path: the kernel's row-absolute causal mask plus the
+        # segment-id mask realizes the identical objective as the XLA
+        # blockwise path's within-segment positions (cross-segment pairs die
+        # on the segment compare either way), so the two routes are
+        # numerically interchangeable (tests/test_kernels.py).
+        from repro.kernels.ops import flash_attention
+
+        bq, bkv = _flash_blocks(
+            cfg, s, b, h, kv, dh, q.dtype, segments is not None
+        )
+        out = flash_attention(q, k, v, segments, cfg.causal, bq, bkv)
+        return out.reshape(b, s, h * dh) @ params["wo"], None
+
     q = q.reshape(b, s, kv, g, dh)
 
     new_cache = None

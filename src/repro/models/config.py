@@ -65,6 +65,22 @@ class ArchConfig:
     # remat policy for the scanned stack: "none"|"full"|"dots" (perf knob)
     remat: str = "full"
 
+    # ---- kernel routing & autotuning (DESIGN.md §11) ----
+    # Training/prefill attention implementation: "xla" = blockwise-scan
+    # masking in models/attention.py; "flash" = the Pallas segment-aware
+    # flash kernel (fused fwd + tiled two-pass bwd, repro.kernels);
+    # "auto" = flash when the batch is packed (segments present) and the
+    # backend compiles Pallas (TPU), xla otherwise.  Decode always uses the
+    # XLA cache path.
+    attn_impl: Literal["xla", "flash", "auto"] = "auto"
+    # Flash kernel block schedule; 0 = pick automatically (measured probe
+    # when attn_autotune, else the largest divisor of S ≤ 128).
+    attn_block_q: int = 0
+    attn_block_kv: int = 0
+    # Measured (block_q, block_kv) probe per shape cell, cached under
+    # artifacts/autotune/ (repro.kernels.autotune).
+    attn_autotune: bool = False
+
     # ---- §Perf hillclimb levers (default off = paper-faithful baseline) ----
     # cast residual-stream cotangents to bf16 at the head (halves backward
     # activation traffic + makes TP activation all-reduces bf16)

@@ -75,6 +75,16 @@ class LM:
     def __post_init__(self):
         self.plan = stack_plan(self.cfg)
         self.dtype = jnp.dtype(self.cfg.dtype)
+        impl = self.cfg.attn_impl
+        if impl not in ("xla", "flash", "auto"):
+            raise ValueError(
+                f"attn_impl {impl!r} not in ('xla', 'flash', 'auto')"
+            )
+        if impl == "flash" and self.cfg.attn_kind == "mla":
+            raise ValueError(
+                "attn_impl='flash' requires GQA-layout attention; MLA's "
+                "latent score decomposition trains on the XLA blockwise path"
+            )
 
     # -- init ------------------------------------------------------------------
     def init(self, rng) -> Params:

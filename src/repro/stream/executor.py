@@ -45,6 +45,8 @@ from repro.data.sampler import (
 from repro.stream.state import (
     STATE_VERSION,
     StreamCheckpoint,
+    bitmap_to_identities,
+    identities_to_bitmap,
     load_rank_state,
     rank_state_dict,
     step_from_json,
@@ -208,7 +210,7 @@ class StreamExecutor:
             "runner": {
                 "iteration": runner.iteration,
                 "emitted_total": runner.emitted_total,
-                "emitted_ids": sorted(runner.emitted_ids),
+                "emitted_bitmap": identities_to_bitmap(runner.emitted_ids),
                 "rounds": runner.rounds,
                 "rounds_offline_extra": runner.rounds_offline_extra,
                 "abandoned": list(runner.abandoned),
@@ -281,7 +283,7 @@ class StreamExecutor:
         runner = ex.runner
         runner.iteration = rs["iteration"]
         runner.emitted_total = rs["emitted_total"]
-        runner.emitted_ids = set(rs["emitted_ids"])
+        runner.emitted_ids = bitmap_to_identities(rs["emitted_bitmap"])
         runner.rounds = rs["rounds"]
         runner.rounds_offline_extra = rs.get("rounds_offline_extra", 0)
         runner.abandoned = list(rs["abandoned"])

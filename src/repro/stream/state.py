@@ -3,13 +3,17 @@
 A mid-epoch checkpoint of the streaming executor captures, layer by layer:
 
   * epoch-level accounting — iteration index, cumulative emit counts, the
-    emitted-identity set (what Theorem 1's coverage audit is computed from),
-    steps delivered so far;
+    emitted-identity set (what Theorem 1's coverage audit is computed from)
+    as a fixed-size identity *bitmap* (identities are dense in [0, N), so the
+    serialized form is N/8 bytes regardless of how many logical iterations
+    have emitted — the ledger no longer grows O(quota) per iteration), steps
+    delivered so far;
   * the admission window — global cursor, staged-but-undelivered views,
     per-rank delivery counts (the shuffle order itself regenerates
     deterministically from (seed, epoch, iteration));
-  * per-rank protocol residuals — the (R, Q, B) pools, the emitted ledger,
-    output queues, counters and local-finish flags;
+  * per-rank protocol residuals — the (R, Q, B) pools, the emitted count
+    (component E is conservation-counted, never stored per sample), output
+    queues, counters and local-finish flags;
   * engine round index, so Round records of a resumed run continue numbering.
 
 Everything is JSON-serializable: samples flatten to ``[view_id, identity,
@@ -29,7 +33,37 @@ from typing import Any
 from repro.core.grouping import Group, Sample
 from repro.core.protocol import IDLE, OdbConfig, RankCounters, RankRuntime
 
-STATE_VERSION = 1
+# v2: emitted ledgers shrank to count + identity bitmap (ROADMAP "checkpoint
+# size"); v1 checkpoints carried per-sample emitted lists and are rejected.
+STATE_VERSION = 2
+
+
+# -- identity bitmap codec ----------------------------------------------------
+
+
+def identities_to_bitmap(ids) -> str:
+    """Hex-encoded bitmap with bit ``i`` set iff identity ``i`` was emitted.
+
+    Identities are dense dataset indices, so the bitmap is ~N/8 bytes — the
+    asymptotic fix for checkpoints on 10^7+-sample datasets, where the old
+    sorted-id list cost ~8 bytes *per emitted view per logical iteration*.
+    """
+    if not ids:
+        return ""
+    buf = bytearray((max(ids) >> 3) + 1)
+    for i in ids:
+        buf[i >> 3] |= 1 << (i & 7)
+    return bytes(buf).hex()
+
+
+def bitmap_to_identities(bitmap: str) -> set[int]:
+    out: set[int] = set()
+    for byte_idx, byte in enumerate(bytes.fromhex(bitmap)):
+        while byte:
+            low = byte & -byte
+            out.add((byte_idx << 3) + low.bit_length() - 1)
+            byte ^= low
+    return out
 
 
 # -- sample / group / step codecs ---------------------------------------------
@@ -71,7 +105,7 @@ def rank_state_dict(rank: RankRuntime) -> dict:
         "pending": [sample_to_json(s) for s in rank.pending],
         "worker_queue": [sample_to_json(s) for s in rank.worker_queue],
         "buffer": [sample_to_json(s) for s in rank.buffer],
-        "emitted": [sample_to_json(s) for s in rank.emitted],
+        "emitted_count": rank.emitted_count,
         "out_queue": [group_to_json(g) for g in rank.out_queue],
         "counters": dataclasses.asdict(rank.counters),
         "local_finished": rank.local_finished,
@@ -86,7 +120,7 @@ def load_rank_state(rank: RankRuntime, state: dict) -> None:
     rank.worker_queue.clear()
     rank.worker_queue.extend(sample_from_json(s) for s in state["worker_queue"])
     rank.buffer = [sample_from_json(s) for s in state["buffer"]]
-    rank.emitted = [sample_from_json(s) for s in state["emitted"]]
+    rank.emitted_count = state["emitted_count"]
     rank.out_queue.clear()
     rank.out_queue.extend(group_from_json(g) for g in state["out_queue"])
     rank.counters = RankCounters(**state["counters"])

@@ -48,8 +48,30 @@ __all__ = [
     "dp_shardmap_step",
     "global_batch_arrays",  # re-exported from core.layout (layout-aware)
     "make_train_step",
+    "resolve_attn_impl",
     "unify_step_shapes",
 ]
+
+
+def resolve_attn_impl(cfg, *, packed: bool, backend: str | None = None) -> str:
+    """Pin ``attn_impl="auto"`` to a concrete route for one training run.
+
+    The routing matrix (DESIGN.md §11): the Pallas flash kernel exactly when
+    the layout packs segments into rows (where its segment-range block
+    skipping pays), the attention layout is GQA, and the backend compiles
+    Pallas (TPU) — the XLA blockwise path otherwise.  CPU runs keep XLA by
+    default (interpret-mode Pallas is a test/bench vehicle, not a train
+    path); an explicit ``attn_impl="flash"`` is honored unchanged.
+
+    Resolving at trainer-build time (instead of leaving "auto" to trace
+    time) makes the compiled route a recorded property of the run.
+    """
+    if cfg.attn_impl != "auto":
+        return cfg.attn_impl
+    if cfg.attn_kind != "gqa":
+        return "xla"
+    backend = backend or jax.default_backend()
+    return "flash" if (packed and backend == "tpu") else "xla"
 
 
 def make_train_step(model: LM, opt_cfg: OptimizerConfig):
@@ -149,8 +171,20 @@ class Trainer:
         self.mesh = mesh
         self._train_step = None
         self.history: list[dict] = []
+        self.attn_impl: str | None = None  # resolved at _build_step
 
     def _build_step(self):
+        # Pin the "auto" kernel route against the loader's actual layout so
+        # what this trainer jits is explicit (and loggable), not an implicit
+        # function of the backend probed mid-trace.
+        self.attn_impl = resolve_attn_impl(
+            self.model.cfg, packed=self.loader.layout.needs_segments
+        )
+        if self.attn_impl != self.model.cfg.attn_impl:
+            self.model = dataclasses.replace(
+                self.model,
+                cfg=dataclasses.replace(self.model.cfg, attn_impl=self.attn_impl),
+            )
         self._train_step = jax.jit(
             make_train_step(self.model, self.opt_cfg), donate_argnums=(0,)
         )

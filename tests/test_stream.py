@@ -420,3 +420,56 @@ class TestLoaderIntegration:
         assert len(head) + len(tail) == len(full)
         for a, b in zip(head + tail, full):
             assert a.metadata == b.metadata
+
+
+class TestEmittedLedgerBitmap:
+    """ROADMAP "checkpoint size": the serialized emitted ledger is a count
+    plus an identity bitmap — O(N/8) bytes total, not O(quota) triples per
+    logical iteration — and the shrink is invisible to resume identity."""
+
+    def test_codec_roundtrip(self):
+        from repro.stream.state import bitmap_to_identities, identities_to_bitmap
+
+        for ids in (set(), {0}, {7}, {8}, {0, 1, 63, 64, 1000}, set(range(0, 500, 3))):
+            assert bitmap_to_identities(identities_to_bitmap(ids)) == ids
+
+    def test_checkpoint_carries_no_per_sample_ledger(self):
+        records = make_records(60, 3)
+        ex = StreamExecutor(records, POLICY, 2, small_cfg(), seed=1)
+        for _ in range(5):
+            ex.step()
+        payload = ex.checkpoint().payload
+        assert "emitted_ids" not in payload["runner"]
+        assert isinstance(payload["runner"]["emitted_bitmap"], str)
+        for rank_state in payload["engine"]["ranks"]:
+            assert "emitted" not in rank_state
+            assert isinstance(rank_state["emitted_count"], int)
+
+    def test_bitmap_resume_preserves_identity_coverage(self):
+        records = make_records(80, 9)
+        cfg = small_cfg()
+        reference = StreamExecutor(records, POLICY, 3, cfg, seed=2)
+        ref_steps = list(reference.steps())
+
+        ex = StreamExecutor(records, POLICY, 3, cfg, seed=2)
+        head = [ex.step() for _ in range(6)]
+        blob = ex.checkpoint().to_json()
+        resumed = StreamExecutor.resume(
+            StreamCheckpoint.from_json(blob), records, POLICY
+        )
+        tail = list(resumed.steps())
+        assert head + tail == ref_steps
+        audit = resumed.audit()
+        assert audit == reference.audit()
+        assert audit.eta_identity == 0.0
+
+    def test_bitmap_is_fixed_size_in_identities(self):
+        """The serialized ledger must not grow with surplus emits: its size
+        is bounded by N/4 hex chars however many views were emitted."""
+        records = make_records(64, 5)
+        ex = StreamExecutor(records, POLICY, 2, small_cfg(), seed=0)
+        list(ex.steps())
+        bitmap = ex.checkpoint().payload["runner"]["emitted_bitmap"]
+        n = ex.spec.dataset_size
+        assert len(bitmap) <= 2 * ((n + 7) // 8)
+        assert ex.runner.emitted_total >= n  # quota met, ledger still O(N/8)
