@@ -12,10 +12,11 @@ test:
 test-fast:  ## skip the slow jax end-to-end modules
 	$(PY) -m pytest -x -q --ignore=tests/test_system.py --ignore=tests/test_train.py --ignore=tests/test_models.py --ignore=tests/test_kernels.py
 
-bench-smoke:  ## streaming data path + layout + kernel benchmarks (CPU)
+bench-smoke:  ## streaming data path + layout + kernel + serving benchmarks (CPU)
 	$(PP) $(PY) -m benchmarks.run --streaming
 	$(PP) $(PY) -m benchmarks.run --layout
 	$(PP) $(PY) -m benchmarks.run --kernels
+	$(PP) $(PY) -m benchmarks.run --serving
 
 bench:  ## full benchmark harness (all paper tables)
 	$(PP) $(PY) -m benchmarks.run

@@ -15,6 +15,9 @@ under ``artifacts/bench/``.
   kernels            — XLA blockwise vs Pallas flash fwd/bwd on packed rows +
                        live-tile census under segment-aware block skipping
                        (emits BENCH_kernels.json; also `run.py --kernels`)
+  serving            — continuous vs static batching on the slot-cache serve
+                       engine: tokens/s, p50/p99 latency, compile-once census
+                       (emits BENCH_serving.json; also `run.py --serving`)
 
 Select one module by name (``run.py streaming``) or flag (``run.py
 --streaming``); no argument runs everything.
@@ -34,6 +37,7 @@ def main() -> None:
         layout,
         protocol_audit,
         roofline_bench,
+        serving,
         streaming,
         throughput,
     )
@@ -47,6 +51,7 @@ def main() -> None:
         ("streaming", streaming),
         ("layout", layout),
         ("kernels", kernels),
+        ("serving", serving),
     ]
     only = sys.argv[1].lstrip("-") if len(sys.argv) > 1 else None
     names = [name for name, _ in modules]

@@ -1,10 +1,12 @@
-"""Serve a small LM with batched requests over the packed-segment path.
+"""Serve a small LM with continuous batching over the packed-segment path.
 
-ODB groups variable-length requests under a token budget; the group is
-*packed* into one segment-id-tagged stream (beyond-paper emission mode,
-DESIGN.md §8) and prefilled through the Pallas segment-aware flash-attention
-kernel (interpret mode on CPU), then decoded autoregressively per request
-with a per-sample KV cache.
+Heterogeneous-length requests are admitted under the ODB ``l_max`` token
+budget into a slot-based KV cache (DESIGN.md §12): each admission cohort
+prefills in ONE packed segment-masked forward (the PR-2/3 packed-flash
+layout) whose K/V scatters straight into per-request cache slots, and every
+generated token costs one fixed-shape ``(num_slots, 1)`` decode step against
+the slot cache — O(S) per token, replacing this example's previous
+re-prefill-per-token loop (O(S²)).
 
     PYTHONPATH=src python examples/serve_packed.py
 """
@@ -16,9 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import OdbConfig, PackedBucketSpec, Sample, greedy_group, pack_group
 from repro.kernels.ops import flash_attention
 from repro.models import LM
+from repro.serve import ContinuousBatchingEngine, ServeConfig
 
 
 def main():
@@ -26,34 +28,38 @@ def main():
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    # Incoming request queue: heterogeneous prompt lengths (online lengths).
+    # Incoming request queue: heterogeneous prompt AND decode lengths.
     rng = np.random.default_rng(0)
-    prompts = [int(l) for l in rng.integers(8, 96, size=12)]
-    samples = [Sample(view_id=i, identity=i, length=l) for i, l in enumerate(prompts)]
-    groups = greedy_group(samples, l_max=256)  # ODB token-budget batching
-    print(f"{len(prompts)} requests -> {len(groups)} token-budget groups")
+    engine = ContinuousBatchingEngine(
+        model, params,
+        ServeConfig(num_slots=4, max_len=160, l_max=512, lookahead=8),
+    )
+    rids = []
+    for _ in range(12):
+        prompt = rng.integers(1, cfg.vocab_size, size=int(rng.integers(8, 96)))
+        rids.append(engine.submit(prompt, int(rng.integers(4, 24))))
+    outputs = engine.run()
 
-    spec = PackedBucketSpec(min_tokens=64, max_tokens=512)
-    for gi, group in enumerate(groups):
-        packed = pack_group(group, spec, vocab_size=cfg.vocab_size)
-        tokens = jnp.asarray(packed.tokens)
-        segments = jnp.asarray(packed.segment_ids)
-        positions = jnp.asarray(packed.positions)
-        # Packed prefill: one forward pass over the packed stream with
-        # segment-masked attention (no cross-request contamination).
-        logits = model.forward(
-            params,
-            {"tokens": tokens, "positions": positions, "segments": segments},
-        )
-        # Greedy next token per request = logits at each segment's last slot.
-        seg_np = np.asarray(segments[0])
-        nxt = {}
-        for s in range(1, packed.real_samples + 1):
-            idx = int(np.where(seg_np == s)[0].max())
-            nxt[group.samples[s - 1].view_id] = int(jnp.argmax(logits[0, idx]))
+    st = engine.stats
+    print(
+        f"{len(rids)} requests -> {st.prefill_calls} packed prefill cohorts, "
+        f"{st.decode_steps} decode steps "
+        f"({100 * st.slot_decode_occupancy:.0f}% slot occupancy)"
+    )
+    print(
+        f"slot reuse: {len(engine.slots.assignments)} allocations over "
+        f"{engine.config.num_slots} slots; peak budget "
+        f"{st.peak_projected_tokens}/{engine.config.l_max} tokens"
+    )
+    print(
+        f"compile-once: decode traced {engine.decode_traces}x, prefill "
+        f"buckets {dict(engine.prefill_traces)}"
+    )
+    for rid in rids[:3]:
+        req = engine.requests[rid]
         print(
-            f"  group {gi}: {packed.real_samples} reqs, {packed.real_tokens} real tokens, "
-            f"pad {100 * packed.padding_fraction:.1f}%, first tokens {dict(list(nxt.items())[:3])}"
+            f"  req {rid}: prompt {req.prompt_len} -> "
+            f"{len(outputs[rid])} new tokens {[int(t) for t in outputs[rid][:6]]}..."
         )
 
     # Kernel sanity on the packed layout (interpret mode = CPU execution).

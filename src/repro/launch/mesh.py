@@ -9,7 +9,17 @@ import and then calls these.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; older CPU containers lack it
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+
+except ImportError:  # pragma: no cover - depends on installed jax
+
+    def _axis_kwargs(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,7 +32,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -32,7 +42,7 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh(
         (n // model_parallel, model_parallel),
         ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+        **_axis_kwargs(2),
     )
 
 

@@ -1,7 +1,14 @@
-"""Serving launcher: batched prefill + autoregressive decode.
+"""Serving launcher: continuous batching on the ODB admission core.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --smoke \
-        --batch 4 --prompt-len 32 --new-tokens 16
+        --requests 24 --slots 8 --max-len 256 --l-max 1024
+
+Replaces the old static-batch loop: heterogeneous-length requests are
+admitted into in-flight decode batches under the shared ``l_max`` budget
+(DESIGN.md §12); completed requests free KV slots that the next tick
+refills.  ``--mode static`` runs the identical jitted steps in
+drain-before-refill mode — the old loop's schedule — for an A/B on the same
+request trace (benchmarks/serving.py measures this properly).
 """
 
 from __future__ import annotations
@@ -10,19 +17,28 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import LM
+from repro.serve import ContinuousBatchingEngine, ServeConfig, synth_request_trace
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_0_6b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--prompt-min", type=int, default=8)
+    ap.add_argument("--prompt-max", type=int, default=96)
+    ap.add_argument("--new-min", type=int, default=2)
+    ap.add_argument("--new-max", type=int, default=48)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--l-max", type=int, default=1024)
+    ap.add_argument("--lookahead", type=int, default=32)
+    ap.add_argument("--mode", default="continuous", choices=("continuous", "static"))
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -30,32 +46,50 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.new_tokens
 
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 1, cfg.vocab_size
+    engine = ContinuousBatchingEngine(
+        model, params,
+        ServeConfig(
+            num_slots=args.slots, max_len=args.max_len, l_max=args.l_max,
+            lookahead=args.lookahead, continuous=args.mode == "continuous",
+        ),
+    )
+    trace = synth_request_trace(
+        args.requests, vocab=cfg.vocab_size,
+        prompt_min=args.prompt_min, prompt_max=args.prompt_max,
+        new_min=args.new_min, new_max=args.new_max, seed=args.seed,
     )
     t0 = time.perf_counter()
-    logits, caches = model.prefill(params, prompts, max_len=max_len)
-    tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    t_prefill = time.perf_counter() - t0
+    rids = [engine.submit(p, n) for p, n in trace]
+    outputs = engine.run()
+    wall = time.perf_counter() - t0
 
-    decode = jax.jit(model.decode_step)
-    out = [tokens]
-    idx = jnp.array(args.prompt_len, jnp.int32)
-    t0 = time.perf_counter()
-    for _ in range(args.new_tokens - 1):
-        logits, caches = decode(params, caches, tokens, idx)
-        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tokens)
-        idx = idx + 1
-    jax.block_until_ready(tokens)
-    t_decode = time.perf_counter() - t0
-    gen = jnp.concatenate(out, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms; decode: "
-          f"{1e3 * t_decode / max(args.new_tokens - 1, 1):.2f} ms/token")
-    print("generated ids[0]:", [int(t) for t in gen[0]])
+    lat = np.array([engine.requests[r].latency_s for r in rids])
+    ttft = np.array(
+        [engine.requests[r].first_token_s - engine.requests[r].submitted_s for r in rids]
+    )
+    st = engine.stats
+    print(
+        f"arch={cfg.name} mode={args.mode} requests={args.requests} "
+        f"slots={args.slots} l_max={args.l_max}"
+    )
+    print(
+        f"tokens/s: {st.generated_tokens / wall:.1f}  "
+        f"({st.generated_tokens} tokens in {wall:.2f}s, "
+        f"{st.decode_steps} decode steps, occupancy "
+        f"{100 * st.slot_decode_occupancy:.0f}%)"
+    )
+    print(
+        f"latency p50/p99: {1e3 * np.percentile(lat, 50):.0f}/"
+        f"{1e3 * np.percentile(lat, 99):.0f} ms; "
+        f"ttft p50: {1e3 * np.percentile(ttft, 50):.0f} ms"
+    )
+    print(
+        f"compile-once: decode traced {engine.decode_traces}x, prefill "
+        f"buckets {dict(engine.prefill_traces)}"
+    )
+    sample = outputs[rids[0]]
+    print("generated ids[0]:", [int(t) for t in sample])
 
 
 if __name__ == "__main__":

@@ -81,6 +81,53 @@ def train_batch_specs(cfg, cell: ShapeCell) -> dict:
     return specs
 
 
+# -----------------------------------------------------------------------------
+# Serving cells (continuous batching, DESIGN.md §12)
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCell:
+    """Shape contract of one continuous-batching serve deployment.
+
+    ``num_slots`` fixes the decode batch rows (= KV-cache slots); ``max_len``
+    the per-slot cache capacity; ``l_max`` the shared admission token budget
+    (the Eq.-1 knob reused from training).  The packed prefill stream is
+    bucketed separately (``PackedBucketSpec`` grid in the engine config), so
+    the compiled-program census is: exactly one decode step + one prefill
+    step per occupied (rows, capacity) bucket.
+    """
+
+    name: str
+    num_slots: int
+    max_len: int
+    l_max: int
+
+
+SERVE_SHAPES = {
+    # Smoke/CI cell: what tests/test_serve.py and benchmarks/serving.py run.
+    "serve_smoke": ServeCell("serve_smoke", 8, 256, 1024),
+    # Production-shaped cell mirroring decode_32k's batch geometry.
+    "serve_32k": ServeCell("serve_32k", 128, 32768, 1 << 22),
+}
+
+
+def serve_decode_specs(cell: ServeCell) -> tuple:
+    """(tokens, lengths) stand-ins for the slot decode step."""
+    return (
+        ShapeDtypeStruct((cell.num_slots, 1), jnp.int32),
+        ShapeDtypeStruct((cell.num_slots,), jnp.int32),
+    )
+
+
+def serve_prefill_specs(rows: int, cap: int, num_slots: int) -> tuple:
+    """(tokens, positions, segments, dest_slot, gather_rows, gather_cols)
+    stand-ins for one packed scatter-prefill bucket."""
+    stream = ShapeDtypeStruct((rows, cap), jnp.int32)
+    gather = ShapeDtypeStruct((num_slots,), jnp.int32)
+    return (stream, stream, stream, stream, gather, gather)
+
+
 def prefill_token_specs(cfg, cell: ShapeCell):
     if cfg.input_embeds:
         return ShapeDtypeStruct(

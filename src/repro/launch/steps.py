@@ -18,9 +18,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.launch import sharding as shr
 from repro.launch.shapes import (
+    ServeCell,
     ShapeCell,
     decode_token_specs,
     prefill_token_specs,
+    serve_decode_specs,
+    serve_prefill_specs,
     train_batch_specs,
 )
 from repro.models.model import LM, shift_labels
@@ -152,3 +155,94 @@ def build_decode_step(model: LM, mesh, cell: ShapeCell, max_len: int | None = No
     )
     args = (params_shapes, cache_shapes, tokens_shape, index_shape)
     return fn, args, (pspecs, cspecs, tspec, P())
+
+
+# -----------------------------------------------------------------------------
+# Serve: continuous batching (slot cache, DESIGN.md §12)
+# -----------------------------------------------------------------------------
+
+
+def build_serve_decode_step(model: LM, mesh, cell: ServeCell):
+    """Slot decode: ``(num_slots, 1)`` tokens against per-slot frontiers.
+
+    Returns ``(fn, abstract_args, traces)`` where ``traces`` is a mutable
+    trace counter incremented every time XLA re-traces the step — the
+    compile-once contract says it must read exactly 1 across any sequence of
+    admissions and evictions (tests/test_serve.py, benchmarks/serving.py).
+    Argmax over the real vocabulary is fused into the step so only
+    ``(num_slots, 1)`` token ids travel back to the host per tick.
+    """
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_caches(cell.num_slots, cell.max_len)
+    )
+    tokens_shape, lengths_shape = serve_decode_specs(cell)
+    traces = {"count": 0}
+
+    def decode(params, caches, tokens, lengths):
+        traces["count"] += 1
+        logits, caches = model.decode_step_slots(params, caches, tokens, lengths)
+        nxt = jnp.argmax(
+            logits[:, :, : model.cfg.vocab_size], axis=-1
+        ).astype(jnp.int32)
+        return nxt, caches
+
+    kwargs = {}
+    if mesh is not None:
+        pspecs = shr.param_specs(params_shapes, model.cfg, mesh)
+        cspecs = shr.cache_specs(cache_shapes, model.cfg, mesh)
+        kwargs = dict(
+            in_shardings=(
+                shr.named(pspecs, mesh),
+                shr.named(cspecs, mesh),
+                NamedSharding(mesh, P()),
+                NamedSharding(mesh, P()),
+            ),
+            out_shardings=(None, shr.named(cspecs, mesh)),
+        )
+    fn = jax.jit(decode, donate_argnums=(1,), **kwargs)
+    args = (params_shapes, cache_shapes, tokens_shape, lengths_shape)
+    return fn, args, traces
+
+
+def build_serve_prefill_step(
+    model: LM, mesh, cell: ServeCell, rows: int, cap: int
+):
+    """Packed scatter prefill for one ``(rows, cap)`` stream bucket.
+
+    Compiles once per occupied bucket of the engine's ``PackedBucketSpec``
+    grid: a mixed-length admission cohort shares one segment-masked stream
+    (the PR-2/3 packed flash path), K/V scatters into the cohort's cache
+    slots, and the per-segment last-position logits are gathered in-step —
+    indexed *by slot*, so the host reads one ``(num_slots, vocab)`` row per
+    admitted request no matter how the cohort was packed.
+    """
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_caches(cell.num_slots, cell.max_len)
+    )
+    stream_shapes = serve_prefill_specs(rows, cap, cell.num_slots)
+    traces = {"count": 0}
+
+    def prefill(params, caches, tokens, positions, segments, dest_slot,
+                gather_rows, gather_cols):
+        traces["count"] += 1
+        logits, caches = model.prefill_packed(
+            params, caches, tokens, positions, segments, dest_slot
+        )
+        picked = logits[gather_rows, gather_cols, : model.cfg.vocab_size]
+        return picked, caches
+
+    kwargs = {}
+    if mesh is not None:
+        pspecs = shr.param_specs(params_shapes, model.cfg, mesh)
+        cspecs = shr.cache_specs(cache_shapes, model.cfg, mesh)
+        rep = NamedSharding(mesh, P())
+        kwargs = dict(
+            in_shardings=(shr.named(pspecs, mesh), shr.named(cspecs, mesh))
+            + (rep,) * 6,
+            out_shardings=(None, shr.named(cspecs, mesh)),
+        )
+    fn = jax.jit(prefill, donate_argnums=(1,), **kwargs)
+    args = (params_shapes, cache_shapes) + stream_shapes
+    return fn, args, traces

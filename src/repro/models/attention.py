@@ -246,8 +246,9 @@ def gqa_attention(
     positions: jax.Array,  # (B, S)
     segments: jax.Array | None = None,
     cache: KVCache | None = None,
-    cache_index: jax.Array | None = None,  # scalar: tokens already in cache
+    cache_index: jax.Array | None = None,  # scalar or (B,): tokens cached
     mesh=None,
+    dest_slot: jax.Array | None = None,  # (B, S): packed→slot scatter map
 ) -> tuple[jax.Array, KVCache | None]:
     b, s, _ = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -264,6 +265,35 @@ def gqa_attention(
         k = rms_norm(k, params["k_norm"])
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None and dest_slot is not None:
+        # Slot-scatter prefill (serving, DESIGN.md §12): attention itself is
+        # the cache-free packed-segment path — flash-eligible, identical
+        # masking contract — while the roped K/V stream is scattered into
+        # per-request cache rows at (dest_slot, within-segment position).
+        # Padding positions carry an out-of-range dest row, so their writes
+        # drop; within-segment rope positions are exactly the per-slot
+        # absolute positions the decode path replays against.
+        ck = cache.k.at[dest_slot, positions].set(
+            k.astype(cache.k.dtype), mode="drop"
+        )
+        cv = cache.v.at[dest_slot, positions].set(
+            v.astype(cache.v.dtype), mode="drop"
+        )
+        new_cache = KVCache(k=ck, v=cv)
+        if use_flash_attention(cfg, segments, None):
+            from repro.kernels.ops import flash_attention
+
+            bq, bkv = _flash_blocks(
+                cfg, s, b, h, kv, dh, q.dtype, segments is not None
+            )
+            out = flash_attention(q, k, v, segments, cfg.causal, bq, bkv)
+        else:
+            out = _block_sdpa(
+                q.reshape(b, s, kv, g, dh), k, v, positions, positions,
+                segments, segments, None, cfg.causal, 1.0 / (dh**0.5),
+            )
+        return out.reshape(b, s, h * dh) @ params["wo"], new_cache
 
     if use_flash_attention(cfg, segments, cache):
         # Pallas fused path: the kernel's row-absolute causal mask plus the
@@ -284,12 +314,27 @@ def gqa_attention(
     new_cache = None
     if cache is not None:
         assert cache_index is not None
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, k.astype(cache.k.dtype), cache_index, axis=1
-        )
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, v.astype(cache.v.dtype), cache_index, axis=1
-        )
+        if jnp.ndim(cache_index) == 1:
+            # Per-slot cache frontier (continuous-batching decode): row i
+            # writes its new K/V at its own offset ``cache_index[i]`` and
+            # reads keys strictly below its frontier — every slot sits at a
+            # different depth inside one fixed-shape step.
+            rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+            cols = (
+                cache_index.astype(jnp.int32)[:, None]
+                + jnp.arange(s, dtype=jnp.int32)[None, :]
+            )
+            ck = cache.k.at[rows, cols].set(k.astype(cache.k.dtype), mode="drop")
+            cv = cache.v.at[rows, cols].set(v.astype(cache.v.dtype), mode="drop")
+            k_limit = (cache_index.astype(positions.dtype)[:, None] + s)[:, :, None]
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), cache_index, axis=1
+            )
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), cache_index, axis=1
+            )
+            k_limit = cache_index + s
         new_cache = KVCache(k=ck, v=cv)
         s_max = ck.shape[1]
         k_pos = jnp.broadcast_to(
@@ -297,7 +342,7 @@ def gqa_attention(
         )
         out = _block_sdpa(
             q, ck.astype(q.dtype), cv.astype(q.dtype),
-            positions, k_pos, None, None, cache_index + s, cfg.causal,
+            positions, k_pos, None, None, k_limit, cfg.causal,
             1.0 / (dh**0.5),
         )
     else:
@@ -430,10 +475,18 @@ def mla_attention(
     return out @ params["wo"], new_cache
 
 
-def apply_attention(params, x, cfg, positions, segments=None, cache=None, cache_index=None, mesh=None):
+def apply_attention(params, x, cfg, positions, segments=None, cache=None, cache_index=None, mesh=None, dest_slot=None):
     if cfg.attn_kind == "mla":
+        if dest_slot is not None:
+            raise NotImplementedError(
+                "slot-scatter prefill needs the GQA cache layout; MLA serving "
+                "stays on the per-request prefill path (DESIGN.md §12)"
+            )
         return mla_attention(params, x, cfg, positions, segments, cache, cache_index)
-    return gqa_attention(params, x, cfg, positions, segments, cache, cache_index, mesh=mesh)
+    return gqa_attention(
+        params, x, cfg, positions, segments, cache, cache_index,
+        mesh=mesh, dest_slot=dest_slot,
+    )
 
 
 def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> KVCache | MLACache:

@@ -100,15 +100,22 @@ def layer_forward(
     cache,
     cache_index,
     mesh,
+    dest_slot=None,
 ):
     kind = cfg.layer_kind(layer_idx)
     h = apply_norm(params["norm_mixer"], x, cfg)
     if kind == "attn":
         mixed, new_cache = apply_attention(
             params["mixer"], h, cfg, positions, segments, cache, cache_index,
-            mesh=mesh,
+            mesh=mesh, dest_slot=dest_slot,
         )
     else:
+        if dest_slot is not None:
+            raise NotImplementedError(
+                "slot-scatter prefill cannot reconstruct per-segment SSM "
+                "states from a packed stream; SSM serving uses the "
+                "per-request prefill path (DESIGN.md §12)"
+            )
         mixed, new_cache = apply_ssm_block(params["mixer"], h, cfg, cache)
     x = x + mixed
     if "norm_ffn" not in params:  # FFN-free block (mamba2: SSD mixer only)
@@ -135,13 +142,14 @@ def make_unit_params(key, cfg, layer_indices, dtype) -> Params:
     }
 
 
-def unit_forward(unit_params, x, cfg, layer_indices, positions, segments, unit_cache, cache_index, mesh):
+def unit_forward(unit_params, x, cfg, layer_indices, positions, segments, unit_cache, cache_index, mesh, dest_slot=None):
     new_caches = {}
     for j, layer_idx in enumerate(layer_indices):
         sub_cache = unit_cache.get(f"sub{j}") if unit_cache else None
         x, nc = layer_forward(
             unit_params[f"sub{j}"], x, cfg, layer_idx,
             positions, segments, sub_cache, cache_index, mesh,
+            dest_slot=dest_slot,
         )
         if nc is not None:
             new_caches[f"sub{j}"] = nc

@@ -129,7 +129,8 @@ class LM:
         return positions, segments
 
     def _run_stack(
-        self, params, x, positions, segments, caches=None, cache_index=None
+        self, params, x, positions, segments, caches=None, cache_index=None,
+        dest_slot=None,
     ):
         cfg, plan, mesh = self.cfg, self.plan, self.mesh
 
@@ -139,7 +140,7 @@ class LM:
                 pc = caches["prefix"][i] if caches else None
                 x, nc = unit_forward(
                     params["prefix"][i], x, cfg, (l,), positions, segments,
-                    pc, cache_index, mesh,
+                    pc, cache_index, mesh, dest_slot=dest_slot,
                 )
                 new_prefix_caches.append(nc)
 
@@ -152,7 +153,7 @@ class LM:
                 h = _sp_constraint(h, mesh)
             h, new_cache = unit_forward(
                 unit_params, h, cfg, unit_layers, positions, segments,
-                unit_cache, cache_index, mesh,
+                unit_cache, cache_index, mesh, dest_slot=dest_slot,
             )
             if cfg.sequence_sharding:
                 h = _sp_constraint(h, mesh)
@@ -227,6 +228,62 @@ class LM:
         x = apply_norm(params["final_norm"], x[:, -1:], self.cfg)
         logits = (x @ params["unembed"]).astype(jnp.float32)
         return logits, caches
+
+    def prefill_packed(
+        self,
+        params: Params,
+        caches: Params,
+        tokens: jax.Array,  # (R, S) packed-segment stream
+        positions: jax.Array,  # (R, S) within-segment positions
+        segments: jax.Array,  # (R, S) 0 = padding, >=1 per request
+        dest_slot: jax.Array,  # (R, S) cache row per stream position
+    ):
+        """Packed-segment prefill scattering K/V into per-request cache slots.
+
+        The continuous-batching serving path (DESIGN.md §12): several
+        admitted prompts share one packed stream — attention is the
+        segment-masked train-path route (Pallas flash when routed), so a
+        mixed-length admission cohort prefills in one fixed-shape call —
+        while each layer's roped K/V lands in the cache row named by
+        ``dest_slot`` at its within-segment position.  Padding positions
+        point ``dest_slot`` out of range so their writes drop.  Returns the
+        full-stream logits (gathering per-segment last positions is the
+        caller's concern: the jitted serve step fuses the gather).
+        """
+        x = self._embed(params, {"tokens": tokens})
+        x, caches = self._run_stack(
+            params, x, positions, segments, caches, None, dest_slot=dest_slot
+        )
+        x = apply_norm(params["final_norm"], x, self.cfg)
+        logits = (x @ params["unembed"]).astype(jnp.float32)
+        return logits, caches
+
+    def decode_step_slots(
+        self,
+        params: Params,
+        caches: Params,
+        tokens: jax.Array,  # (B, 1) — one pending token per cache slot
+        lengths: jax.Array,  # (B,) int32: per-slot tokens already cached
+    ):
+        """One decode step against per-slot cache frontiers.
+
+        The continuous-batching analogue of :meth:`decode_step`: every cache
+        row (slot) sits at its own depth ``lengths[i]``, so admission and
+        eviction never change the step's shape — the jitted decode compiles
+        exactly once for ``(B, 1)`` regardless of which requests occupy the
+        slots (the compile-once contract, DESIGN.md §12).
+        """
+        b, s = tokens.shape
+        x = self._embed(params, {"tokens": tokens})
+        positions = lengths.astype(jnp.int32)[:, None] + jnp.arange(
+            s, dtype=jnp.int32
+        )
+        x, new_caches = self._run_stack(
+            params, x, positions, None, caches, lengths
+        )
+        x = apply_norm(params["final_norm"], x, self.cfg)
+        logits = (x @ params["unembed"]).astype(jnp.float32)
+        return logits, new_caches
 
     def decode_step(
         self,

@@ -1,0 +1,29 @@
+"""Continuous-batching serving engine on the ODB admission core (DESIGN.md §12)."""
+
+from repro.serve.engine import ContinuousBatchingEngine, ServeConfig, ServeStats
+from repro.serve.requests import (
+    EVICTED,
+    FINISHED,
+    QUEUED,
+    RUNNING,
+    WAITING,
+    Request,
+    RequestWindow,
+    synth_request_trace,
+)
+from repro.serve.slots import SlotManager
+
+__all__ = [
+    "ContinuousBatchingEngine",
+    "EVICTED",
+    "FINISHED",
+    "QUEUED",
+    "RUNNING",
+    "Request",
+    "RequestWindow",
+    "ServeConfig",
+    "ServeStats",
+    "SlotManager",
+    "WAITING",
+    "synth_request_trace",
+]

@@ -4,10 +4,11 @@ scheduling, async prefetch, and resumable loader state (DESIGN.md §9)."""
 from repro.stream.executor import StreamExecutor
 from repro.stream.prefetch import PrefetchIterator, PrefetchStats
 from repro.stream.state import StreamCheckpoint
-from repro.stream.window import AdmissionWindow, WindowStats
+from repro.stream.window import AdmissionWindow, BoundedWindow, WindowStats
 
 __all__ = [
     "AdmissionWindow",
+    "BoundedWindow",
     "PrefetchIterator",
     "PrefetchStats",
     "StreamCheckpoint",

@@ -20,6 +20,13 @@ Determinism: given (records, policy, pipeline_epoch, spec, shuffle_epoch),
 admission order, view ids and realized lengths are identical to the offline
 ``realize_lengths`` + ``shard_views`` pair — with ``lookahead >= M`` the
 downstream step schedule is bit-for-bit the eager one (tests/test_stream.py).
+
+The cursor/staging/backpressure machinery is independent of *what* is being
+realized, so it lives in :class:`BoundedWindow` — the epoch window below
+binds it to the sampler order + ``run_pipeline``, and the serving engine
+binds the same mechanics to a live request queue
+(``repro.serve.requests.RequestWindow``), where "realization" is the
+tokenizer stamping a request's true token cost (DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -46,65 +53,57 @@ class WindowStats:
         return dataclasses.asdict(self)
 
 
-class AdmissionWindow(ViewSource):
-    """Incremental, lookahead-bounded realization of one logical iteration.
+class BoundedWindow(ViewSource):
+    """Lookahead-bounded realization over a (possibly growing) position order.
 
-    One window corresponds to one logical sampler iteration (one shuffled,
-    padded view order).  Ranks pull with ``take(rank, k)``; the window
-    advances a single global cursor through the order, realizing lengths and
-    distributing views to per-rank staging deques (stride-sharding:
-    ``rank = position % W``), while never holding more than ``lookahead``
-    realized-undelivered views.
+    Subclasses define the order: :meth:`order_size` (how many positions exist
+    right now), :meth:`realize` (pay the realization cost for one position and
+    return its :class:`Sample`), and :meth:`order_open` (may more positions
+    arrive later? — always ``False`` for an epoch, ``True`` for a live
+    request queue until it is closed).  The base class owns the single global
+    cursor, the per-rank staging deques (stride-sharding:
+    ``rank = position % W``), and the backpressure contract: at most
+    ``lookahead`` realized-but-undelivered samples are resident at any
+    instant (backpressure by refusal, not by blocking).
 
     ``lookahead`` must be at least ``world_size`` — below that, a full budget
     can consist entirely of views staged for other ranks and the requesting
     rank could starve for a round with nothing forcing progress.
     """
 
-    def __init__(
-        self,
-        records: list[RawRecord],
-        policy: PipelinePolicy,
-        spec: SamplerSpec,
-        *,
-        shuffle_epoch: int,
-        pipeline_epoch: int = 0,
-        lookahead: int | None = None,
-        view_id_base: int = 0,
-    ) -> None:
-        if lookahead is None:
-            lookahead = spec.total_views
-        if lookahead < spec.world_size:
+    def __init__(self, world_size: int, lookahead: int) -> None:
+        if lookahead < world_size:
             raise ValueError(
-                f"lookahead {lookahead} < world_size {spec.world_size}: "
+                f"lookahead {lookahead} < world_size {world_size}: "
                 "a full window could hold no view for the requesting rank"
             )
-        self.records = records
-        self.policy = policy
-        self.spec = spec
-        self.shuffle_epoch = shuffle_epoch
-        self.pipeline_epoch = pipeline_epoch
+        self.world_size = world_size
         self.lookahead = lookahead
-        self.view_id_base = view_id_base
-        self.order = global_view_order(spec, shuffle_epoch)  # identities only
         self.cursor = 0
         self.resident = 0
         self.staged: list[collections.deque[Sample]] = [
-            collections.deque() for _ in range(spec.world_size)
+            collections.deque() for _ in range(world_size)
         ]
-        self.delivered_per_rank = [0] * spec.world_size
+        self.delivered_per_rank = [0] * world_size
         self.stats = WindowStats()
+
+    # -- order interface (subclass responsibility) -----------------------------
+    def order_size(self) -> int:  # pragma: no cover
+        """Number of positions currently in the order (may grow)."""
+        raise NotImplementedError
+
+    def realize(self, position: int) -> Sample:  # pragma: no cover
+        """Run the realization pipeline for one position."""
+        raise NotImplementedError
+
+    def order_open(self) -> bool:
+        """May positions beyond ``order_size()`` still arrive?"""
+        return False
 
     # -- admission -------------------------------------------------------------
     def _admit_one(self) -> None:
-        identity = self.order[self.cursor]
-        length = run_pipeline(self.records[identity], self.policy, self.pipeline_epoch)
-        sample = Sample(
-            view_id=self.view_id_base + self.cursor,
-            identity=identity,
-            length=length,
-        )
-        self.staged[self.cursor % self.spec.world_size].append(sample)
+        sample = self.realize(self.cursor)
+        self.staged[self.cursor % self.world_size].append(sample)
         self.cursor += 1
         self.resident += 1
         self.stats.realized += 1
@@ -114,7 +113,7 @@ class AdmissionWindow(ViewSource):
     def take(self, rank: int, k: int) -> list[Sample]:
         dq = self.staged[rank]
         throttled = False
-        while len(dq) < k and self.cursor < len(self.order):
+        while len(dq) < k and self.cursor < self.order_size():
             if self.resident >= self.lookahead:
                 throttled = True
                 break
@@ -130,15 +129,69 @@ class AdmissionWindow(ViewSource):
         return out
 
     def exhausted(self, rank: int) -> bool:
-        return self.cursor >= len(self.order) and not self.staged[rank]
+        return (
+            not self.order_open()
+            and self.cursor >= self.order_size()
+            and not self.staged[rank]
+        )
 
     def remaining(self, rank: int) -> int:
-        """Views not yet delivered to ``rank`` (staged + beyond the cursor).
+        """Samples not yet delivered to ``rank`` (staged + beyond the cursor).
 
-        Exact because the padded order has fixed per-rank quota
-        ``ceil(N/W)`` regardless of realized lengths.
+        Exact regardless of realized lengths: stride-sharding makes the
+        count of future positions owned by ``rank`` a pure function of
+        (cursor, order size, W).  For the epoch window this equals
+        ``per_rank_quota - delivered`` (the padded order has fixed per-rank
+        quota ``ceil(N/W)``).
         """
-        return self.spec.per_rank_quota - self.delivered_per_rank[rank]
+        size = self.order_size()
+        first = self.cursor + ((rank - self.cursor) % self.world_size)
+        future = 0 if first >= size else (size - 1 - first) // self.world_size + 1
+        return len(self.staged[rank]) + future
+
+
+class AdmissionWindow(BoundedWindow):
+    """Incremental, lookahead-bounded realization of one logical iteration.
+
+    One window corresponds to one logical sampler iteration (one shuffled,
+    padded view order, fixed at construction): realization is
+    ``run_pipeline`` over the identity at each order position.
+    """
+
+    def __init__(
+        self,
+        records: list[RawRecord],
+        policy: PipelinePolicy,
+        spec: SamplerSpec,
+        *,
+        shuffle_epoch: int,
+        pipeline_epoch: int = 0,
+        lookahead: int | None = None,
+        view_id_base: int = 0,
+    ) -> None:
+        if lookahead is None:
+            lookahead = spec.total_views
+        super().__init__(spec.world_size, lookahead)
+        self.records = records
+        self.policy = policy
+        self.spec = spec
+        self.shuffle_epoch = shuffle_epoch
+        self.pipeline_epoch = pipeline_epoch
+        self.view_id_base = view_id_base
+        self.order = global_view_order(spec, shuffle_epoch)  # identities only
+
+    # -- order interface -------------------------------------------------------
+    def order_size(self) -> int:
+        return len(self.order)
+
+    def realize(self, position: int) -> Sample:
+        identity = self.order[position]
+        length = run_pipeline(self.records[identity], self.policy, self.pipeline_epoch)
+        return Sample(
+            view_id=self.view_id_base + position,
+            identity=identity,
+            length=length,
+        )
 
     # -- checkpointing (stream/state.py) ---------------------------------------
     def state_dict(self) -> dict:

@@ -173,6 +173,133 @@ class TestLemma4DiscardEnvelope:
             assert r.outstanding <= cfg.depth
 
 
+# ---------------------------------------------------------------------------
+# Generated-scenario properties (ISSUE 4): the Theorem-1 / Theorem-2 /
+# Theorem-4 contracts over randomized length *distributions* (uniform,
+# long-tail, bimodal, constant, adversarially sorted), rank counts, quota
+# settings (N above/below/at W, non-divisible remainders) and straggler drain
+# rates — superseding the fixed uniform-lengths + single-straggler-combo
+# coverage above with the whole scenario space.
+# ---------------------------------------------------------------------------
+
+DISTRIBUTIONS = ("uniform", "longtail", "bimodal", "constant", "sorted")
+
+
+def synth_lengths(dist: str, n: int, seed: int) -> list[int]:
+    rng = random.Random(seed)
+    if dist == "constant":
+        return [rng.randint(8, 800)] * n
+    if dist == "uniform":
+        return [rng.randint(8, 800) for _ in range(n)]
+    if dist == "longtail":
+        return [min(int(rng.paretovariate(1.3) * 16) + 8, 4000) for _ in range(n)]
+    if dist == "bimodal":
+        return [
+            rng.randint(8, 64) if rng.random() < 0.8 else rng.randint(1200, 4000)
+            for _ in range(n)
+        ]
+    if dist == "sorted":  # adversarial: monotone lengths defeat shuffling luck
+        return sorted(rng.randint(8, 800) for _ in range(n))
+    raise AssertionError(dist)
+
+
+@st.composite
+def dgap_scenarios(draw):
+    n = draw(st.integers(3, 300))
+    world = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 1 << 16))
+    scenario = {
+        "n": n,
+        "world": world,
+        "lengths": synth_lengths(draw(st.sampled_from(DISTRIBUTIONS)), n, seed),
+        "seed": seed,
+        "buffer": draw(st.integers(4, 64)),
+        "l_max": draw(st.sampled_from([256, 1024, 4096])),
+        "prefetch": draw(st.integers(1, 32)),
+        "workers": draw(st.integers(1, 4)),
+        # Straggler mix: per-rank Q→B drain throttles (None = full rate).
+        "drain_rates": [
+            draw(st.sampled_from([None, None, 1, 3])) for _ in range(world)
+        ],
+    }
+    return scenario
+
+
+def scenario_cfg(sc: dict, join: bool) -> OdbConfig:
+    return OdbConfig(
+        l_max=sc["l_max"],
+        buffer_size=sc["buffer"],
+        prefetch_factor=sc["prefetch"],
+        num_workers=sc["workers"],
+        join_mode=join,
+    )
+
+
+class TestPropertyDGAP:
+    @given(dgap_scenarios())
+    @settings(max_examples=30, deadline=None)
+    def test_theorem1_join_identity_coverage(self, sc):
+        """Thm 1 over the scenario space: exact multiset + identity cover."""
+        make_views = make_views_factory(
+            sc["n"], sc["world"], sc["lengths"], seed=sc["seed"]
+        )
+        audit = run_epoch(
+            make_views, sc["n"], scenario_cfg(sc, True),
+            drain_rates=sc["drain_rates"],
+        )
+        m = sc["world"] * math.ceil(sc["n"] / sc["world"])
+        assert audit.emitted_views == m
+        assert audit.emitted_identities == sc["n"]
+        assert audit.eta_identity == 0.0
+        assert audit.surplus_emits == m - sc["n"]
+        assert audit.logical_iterations == 1
+
+    @given(dgap_scenarios())
+    @settings(max_examples=30, deadline=None)
+    def test_theorem2_nonjoin_quota_closure(self, sc):
+        """Thm 2 over the scenario space: N <= S_emit <= N + S_max."""
+        make_views = make_views_factory(
+            sc["n"], sc["world"], sc["lengths"], seed=sc["seed"]
+        )
+        steps = []
+        audit = run_epoch(
+            make_views, sc["n"], scenario_cfg(sc, False),
+            on_step=steps.append, drain_rates=sc["drain_rates"],
+        )
+        assert audit.eta_quota == 0.0
+        s_max = max(sum(g.size for g in step if g is not IDLE) for step in steps)
+        assert sc["n"] <= audit.emitted_views <= sc["n"] + s_max
+
+    @given(dgap_scenarios(), st.booleans())
+    @settings(max_examples=30, deadline=None)
+    def test_theorem4_bounded_deadlock_free_termination(self, sc, join):
+        """Thm 3/4: every scenario terminates inside the round envelope with
+        positionally aligned output queues after every round — stragglers,
+        adversarial length orderings and W > N included."""
+        cfg = scenario_cfg(sc, join)
+        views = make_views_factory(
+            sc["n"], sc["world"], sc["lengths"], seed=sc["seed"]
+        )(0)
+        engine = OdbProtocolEngine(views, cfg)
+        for rank, rate in zip(engine.ranks, sc["drain_rates"]):
+            rank.drain_rate = rate
+        while True:
+            record = engine.run_round()  # BoundedTerminationError on overrun
+            engine.check_no_leak(sum(len(v) for v in views))
+            assert len({len(r.out_queue) for r in engine.ranks}) == 1
+            done = (
+                all(s == -1 for s in record.statuses)
+                if join
+                else any(s == -1 for s in record.statuses)
+            )
+            if done:
+                break
+        q = math.ceil(sc["n"] / sc["world"])
+        assert engine._round_index <= q + cfg.depth + 64 + (
+            0 if all(r is None for r in sc["drain_rates"]) else q * cfg.depth
+        )
+
+
 class TestAppFEmptyRank:
     """Empty-rank liveness audit (outside the equal-quota premise)."""
 
