@@ -17,6 +17,15 @@ bench-smoke:  ## streaming data path + layout + kernel + serving benchmarks (CPU
 	$(PP) $(PY) -m benchmarks.run --layout
 	$(PP) $(PY) -m benchmarks.run --kernels
 	$(PP) $(PY) -m benchmarks.run --serving
+	$(MAKE) telemetry-smoke
+
+telemetry-smoke:  ## telemetry-enabled train + serve smoke (metrics.json / trace.json)
+	$(PP) $(PY) -m repro.launch.train --arch qwen3_0_6b --smoke --steps 6 \
+	  --world 2 --l-max 1024 --buffer 32 --prefetch 8 --data-scale 0.0005 \
+	  --telemetry artifacts/telemetry/train
+	$(PP) $(PY) -m repro.launch.serve --arch qwen3_0_6b --smoke --requests 12 \
+	  --slots 4 --max-len 192 --l-max 768 \
+	  --telemetry artifacts/telemetry/serve
 
 bench:  ## full benchmark harness (all paper tables)
 	$(PP) $(PY) -m benchmarks.run

@@ -169,3 +169,32 @@ class Timer:
 
     def __exit__(self, *exc):
         self.elapsed = time.perf_counter() - self.t0
+
+
+class timed_section:
+    """Timed ``with``-scope backed by ``obs.trace`` (DESIGN.md §13.2).
+
+    The shared replacement for the benchmarks' hand-rolled
+    ``time.perf_counter()`` bookkeeping: ``.elapsed`` carries the wall time
+    for the benchmark's own arithmetic, and the same interval lands in the
+    process tracer as a ``bench/...`` span when tracing is enabled — so a
+    telemetry-enabled bench run renders its phases on the identical timeline
+    as the instrumented runtime it measures.
+    """
+
+    def __init__(self, name: str, **args) -> None:
+        self.name = name
+        self.args = args
+        self.elapsed = 0.0
+
+    def __enter__(self) -> "timed_section":
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        from repro import obs
+
+        self.elapsed = time.perf_counter() - self.t0
+        obs.default_tracer().complete(
+            self.name, self.t0, self.elapsed, cat="bench", **self.args
+        )

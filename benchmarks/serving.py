@@ -23,11 +23,10 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-import time
 
 import numpy as np
 
-from benchmarks.common import csv_line
+from benchmarks.common import csv_line, timed_section
 
 
 def run_mode(
@@ -53,17 +52,19 @@ def run_mode(
         warm.submit(prompt, new)
     warm.run()
 
+    mode = "continuous" if config.continuous else "static"
     wall = float("inf")
-    for _ in range(repeats):
+    for rep in range(repeats):
         candidate = ContinuousBatchingEngine(
             model, params, config, step_cache=step_cache
         )
-        t0 = time.perf_counter()
-        cand_rids = [candidate.submit(prompt, new) for prompt, new in trace]
-        cand_outputs = candidate.run()
-        elapsed = time.perf_counter() - t0
-        if elapsed < wall:
-            wall, engine, rids, outputs = elapsed, candidate, cand_rids, cand_outputs
+        with timed_section("bench/serve_replay", mode=mode, repeat=rep) as replay:
+            cand_rids = [candidate.submit(prompt, new) for prompt, new in trace]
+            cand_outputs = candidate.run()
+        if replay.elapsed < wall:
+            wall, engine, rids, outputs = (
+                replay.elapsed, candidate, cand_rids, cand_outputs
+            )
 
     latency = np.array([engine.requests[r].latency_s for r in rids])
     ttft = np.array(

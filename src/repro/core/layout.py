@@ -35,8 +35,43 @@ from typing import Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.buckets import BucketSpec, PackedBucketSpec, sample_token_ids
 from repro.core.grouping import Group
+
+
+def _observe_step(name: str, row: Sequence["DeviceBatch"]) -> None:
+    """Publish one built step's padding accounting (DESIGN.md §13).
+
+    ``odb_layout_pad_fraction`` is the device-side padding share of the whole
+    step (IDLE ranks included — their all-pad area is real device waste);
+    ``odb_layout_pack_fill`` is the fill of the rank batches that carry real
+    samples, i.e. how well the layout packs where there is anything to pack.
+    """
+    real = sum(b.real_tokens for b in row)
+    area = sum(b.area for b in row)
+    occupied_area = sum(b.area for b in row if b.real_samples)
+    obs.counter(
+        "odb_layout_real_tokens_total", help="real tokens laid out", layout=name
+    ).inc(real)
+    obs.counter(
+        "odb_layout_device_tokens_total",
+        help="device token slots shipped",
+        layout=name,
+    ).inc(area)
+    obs.counter(
+        "odb_layout_steps_total", help="aligned steps built", layout=name
+    ).inc()
+    if area:
+        obs.gauge(
+            "odb_layout_pad_fraction",
+            help="device-side padding fraction of the last built step",
+        ).set(1.0 - real / area)
+    if occupied_area:
+        obs.gauge(
+            "odb_layout_pack_fill",
+            help="real-token fill of non-IDLE rank batches in the last step",
+        ).set(real / occupied_area)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,8 +138,11 @@ class BatchLayout:
         built = [None if g is None else self.build(g) for g in step]
         real = [b for b in built if b is not None]
         shape = real[-1].shape if real else self.fallback_shape()
-        row = [self.idle_like(shape) if b is None else b for b in built]
-        return self.unify(row)
+        row = self.unify(
+            [self.idle_like(shape) if b is None else b for b in built]
+        )
+        _observe_step(self.name, row)
+        return row
 
     def idle_like(self, shape: tuple[int, int]) -> DeviceBatch:
         """IDLE_DATA sentinel: an all-padding batch annihilated by Eq. 2."""
@@ -301,15 +339,19 @@ class PackedLayout(BatchLayout):
     def build_step(self, step: Sequence[Group | None]) -> list[DeviceBatch]:
         groups = [g for g in step if g is not None]
         if not groups:
-            return [self.idle_like(self.fallback_shape()) for _ in step]
+            row = [self.idle_like(self.fallback_shape()) for _ in step]
+            _observe_step(self.name, row)
+            return row
         cap, n_rows, plans = self.plan_step(groups)
         shape = (n_rows, cap)
         emitted = iter(
             self._emit(g, rows, shape) for g, rows in zip(groups, plans)
         )
-        return [
+        row = [
             self.idle_like(shape) if g is None else next(emitted) for g in step
         ]
+        _observe_step(self.name, row)
+        return row
 
     def fallback_shape(self) -> tuple[int, int]:
         return (1, self.spec.min_tokens)

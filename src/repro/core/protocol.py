@@ -36,8 +36,10 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import time
 from typing import Callable, Iterator, Sequence
 
+from repro import obs
 from repro.core.alignment import (
     AlignmentResult,
     RankAlignmentState,
@@ -276,6 +278,7 @@ class RoundRecord:
     skip_output: bool
     second_gather: bool
     potential: int  # Lyapunov Φ = Σ_r (|R|+|Q|+|B|)  (App. C.2)
+    duration_s: float = 0.0  # wall time of the round (telemetry; DESIGN.md §13)
 
 
 @dataclasses.dataclass
@@ -328,6 +331,26 @@ class OdbProtocolEngine:
         if q is None:
             q = max(len(v) for v in per_rank_views) if per_rank_views else 0
         self.max_rounds = q + config.depth + round_margin
+        # -- telemetry (DESIGN.md §13) ------------------------------------
+        # record_telemetry is cleared for audit-only replays (the offline
+        # reference continuation in EpochRunner) so rounds that never deliver
+        # steps don't pollute the live counters.  on_round lets an owner (the
+        # streaming executor's RoundTimeline) absorb each RoundRecord.
+        self.record_telemetry = True
+        self.on_round: Callable[[RoundRecord], None] | None = None
+        self._m_rounds = obs.counter(
+            "odb_protocol_rounds_total", help="DGAP outer protocol rounds run"
+        )
+        self._m_emitted = obs.counter(
+            "odb_protocol_emitted_views_total",
+            help="sampler views emitted by protocol rounds",
+        )
+        self._m_round_dur = obs.histogram(
+            "odb_protocol_round_duration_seconds",
+            buckets=obs.ROUND_DURATION_BUCKETS,
+            help="wall time of one protocol round",
+            unit="seconds",
+        )
 
     @property
     def world_size(self) -> int:
@@ -356,6 +379,7 @@ class OdbProtocolEngine:
 
     # -- one outer round -----------------------------------------------------------
     def run_round(self) -> RoundRecord:
+        round_t0 = time.perf_counter()
         cfg = self.config
         # Phase 1: fetch/drain on every unfinished rank.
         for rank in self.ranks:
@@ -439,6 +463,7 @@ class OdbProtocolEngine:
             if rank.no_more_input and not rank.buffer:
                 rank.local_finished = True
 
+        duration_s = time.perf_counter() - round_t0
         record = RoundRecord(
             round_index=self._round_index,
             statuses=statuses,
@@ -448,9 +473,25 @@ class OdbProtocolEngine:
             skip_output=skip_output,
             second_gather=second,
             potential=self.potential(),
+            duration_s=duration_s,
         )
         self.records.append(record)
         self._round_index += 1
+        if self.record_telemetry:
+            self._m_rounds.inc()
+            self._m_emitted.inc(emitted_views)
+            self._m_round_dur.observe(duration_s)
+            obs.default_tracer().complete(
+                "dgap/round",
+                round_t0,
+                duration_s,
+                cat="protocol",
+                round=record.round_index,
+                target=target,
+                emitted_views=emitted_views,
+            )
+            if self.on_round is not None:
+                self.on_round(record)
         return record
 
     # -- full logical iteration ---------------------------------------------------
@@ -601,6 +642,10 @@ class EpochRunner:
         self._iteration_open = False
         self._iter_rounds = 0
         self._done = False
+        # Telemetry hook: called as on_closure(terminated_by, iteration,
+        # iteration_rounds) whenever a logical iteration's rounds terminate
+        # (the streaming executor wires its RoundTimeline here).
+        self.on_closure: Callable[[str, int, int], None] | None = None
 
     @property
     def done(self) -> bool:
@@ -637,6 +682,15 @@ class EpochRunner:
         assert self._engine is not None
         self.rounds += self._iter_rounds
         self.abandoned.append(sum(r.outstanding for r in self._engine.ranks))
+        obs.instant(
+            "dgap/closure",
+            cat="protocol",
+            event=terminated_by,
+            iteration=self.iteration,
+            iteration_rounds=self._iter_rounds,
+        )
+        if self.on_closure is not None:
+            self.on_closure(terminated_by, self.iteration, self._iter_rounds)
         if terminated_by == "nonjoin_quota_crossed":
             # The eager stop trimmed the iteration's tail rounds.  Replay the
             # remainder on the (about-to-be-dropped) engine — rounds are a
@@ -645,6 +699,9 @@ class EpochRunner:
             # audit also reports what the offline engine would have run.
             # Grouping/alignment only: no padding, no compute, no delivery.
             engine = self._engine
+            # Audit-only rounds: keep them out of the live round counters.
+            engine.record_telemetry = False
+            engine.on_round = None
             extra = 0
             while True:
                 if self._iter_rounds + extra > engine.max_rounds:

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels.flash_attention import select_block
 
 DEFAULT_CACHE_PATH = pathlib.Path("artifacts") / "autotune" / "attn_blocks.json"
@@ -127,7 +128,16 @@ def autotune_blocks(
     cache = _load_cache(path)
     key = shape_key(b, s, h, kv, d, dtype=dtype, causal=causal, has_segments=has_segments)
     if key in cache:
+        obs.counter(
+            "kernel_autotune_cache_hits_total",
+            help="autotune shape cells served from cache",
+        ).inc()
         return cache[key]
+    obs.counter(
+        "kernel_autotune_cache_misses_total",
+        help="autotune shape cells that ran the measured probe",
+    ).inc()
+    probe_t0 = time.perf_counter()
 
     from repro.kernels.ops import flash_attention  # late: avoid import cycle
 
@@ -165,4 +175,8 @@ def autotune_blocks(
         best = heuristic_blocks(s)
     cache[key] = best
     _persist_cache(path, cache)
+    obs.default_tracer().complete(
+        "kernels/autotune", probe_t0, time.perf_counter() - probe_t0,
+        cat="kernels", key=key, block_q=best[0], block_kv=best[1],
+    )
     return best

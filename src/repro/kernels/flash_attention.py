@@ -546,7 +546,7 @@ def live_tile_counts(
                     and k_pos.max() >= q_pos.min()
                 ):
                     seg_live += 1
-    return {
+    out = {
         "tiles": total,
         "block_q": block_q,
         "block_kv": block_kv,
@@ -555,3 +555,14 @@ def live_tile_counts(
         "causal_live_fraction": causal_live / total if total else 0.0,
         "segment_live_fraction": seg_live / total if total else 0.0,
     }
+    from repro import obs  # deferred: keep kernel import time lean
+
+    obs.gauge(
+        "kernel_live_tile_fraction",
+        help="fraction of attention tiles surviving the block-skip rule",
+        mode="causal",
+    ).set(out["causal_live_fraction"])
+    obs.gauge(
+        "kernel_live_tile_fraction", mode="segment"
+    ).set(out["segment_live_fraction"])
+    return out

@@ -39,7 +39,18 @@ def main() -> None:
     ap.add_argument("--lookahead", type=int, default=32)
     ap.add_argument("--mode", default="continuous", choices=("continuous", "static"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--telemetry", default=None, metavar="DIR",
+        help="enable the obs subsystem and write metrics.json / trace.json "
+             "into DIR at exit (DESIGN.md §13)",
+    )
     args = ap.parse_args()
+
+    reporter = None
+    if args.telemetry:
+        from repro import obs
+
+        reporter = obs.enable_telemetry(args.telemetry)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not cfg.has_decode:
@@ -90,6 +101,17 @@ def main() -> None:
     )
     sample = outputs[rids[0]]
     print("generated ids[0]:", [int(t) for t in sample])
+    if reporter is not None:
+        paths = reporter.write(
+            extra={
+                "arch": cfg.name,
+                "mode": args.mode,
+                "requests": args.requests,
+                "slots": args.slots,
+            }
+        )
+        for kind, path in sorted(paths.items()):
+            print(f"[serve] telemetry {kind}: {path}")
 
 
 if __name__ == "__main__":

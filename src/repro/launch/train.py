@@ -103,7 +103,20 @@ def main() -> None:
         help="stage jax.device_put on the prefetch producer so H2D hides "
              "under the jitted step",
     )
+    ap.add_argument(
+        "--telemetry", default=None, metavar="DIR",
+        help="enable the obs subsystem and write metrics.json / trace.json / "
+             "rounds.json into DIR at exit (DESIGN.md §13)",
+    )
     args = ap.parse_args()
+
+    reporter = None
+    if args.telemetry:
+        from repro import obs
+
+        # Before any instrumented object is built, so construction-time
+        # cached instruments bind to live metrics.
+        reporter = obs.enable_telemetry(args.telemetry)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(
@@ -161,17 +174,26 @@ def main() -> None:
 
     print(f"[train] layout={layout} attn_impl={trainer.attn_impl}")
     for h in trainer.history[-10:]:
-        print(
-            f"step {h['step']:>5}  loss {h['loss']:.4f}  sam/s {h['sam_per_s']:.2f}  "
-            f"pad {100 * h['padding']:.2f}%  "
-            f"dev-pad {100 * h.get('device_padding', 0.0):.2f}%"
-        )
+        print(Trainer.format_log_line(h))
     audit = loader.last_audit
     if audit:
         print(f"eta_identity={audit.eta_identity} eta_quota={audit.eta_quota}")
     if loader.last_prefetch_stats is not None:
         st = loader.last_prefetch_stats
         print(f"prefetch hit_rate={st.hit_rate:.2f} waits={st.wait_s:.3f}s")
+    if reporter is not None:
+        executor = loader.last_executor
+        paths = reporter.write(
+            round_audit=None if executor is None else executor.telemetry,
+            extra={
+                "arch": cfg.name,
+                "layout": layout,
+                "attn_impl": trainer.attn_impl,
+                "steps": step,
+            },
+        )
+        for kind, path in sorted(paths.items()):
+            print(f"[train] telemetry {kind}: {path}")
 
 
 if __name__ == "__main__":

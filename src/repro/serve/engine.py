@@ -35,6 +35,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.buckets import PackedBucketSpec
 from repro.core.grouping import Group, Sample, greedy_group
 from repro.core.layout import PackedLayout
@@ -147,6 +148,27 @@ class ContinuousBatchingEngine:
             fn, _, traces = build_serve_decode_step(model, mesh, self.cell)
             self._step_cache[key] = (fn, traces)
         self._decode_fn, self._decode_traces = self._step_cache[key]
+        # Telemetry (DESIGN.md §13): instruments cached once per engine.
+        self._m_ticks = obs.counter("serve_ticks_total", help="engine scheduler ticks")
+        self._m_admitted = obs.counter(
+            "serve_admitted_total", help="requests admitted into KV slots"
+        )
+        self._m_finished = obs.counter(
+            "serve_finished_total", help="requests completed"
+        )
+        self._m_evicted = obs.counter("serve_evicted_total", help="requests evicted")
+        self._m_occupancy = obs.gauge(
+            "serve_slot_occupancy", help="active KV slots / num_slots after last tick"
+        )
+        self._m_queue_depth = obs.gauge(
+            "serve_queue_depth",
+            help="waiting pool + undelivered submissions after last tick",
+        )
+        self._m_ttft = obs.histogram(
+            "serve_ttft_seconds",
+            help="submit-to-first-token latency",
+            unit="seconds",
+        )
 
     # -- observability ---------------------------------------------------------
     @property
@@ -215,6 +237,7 @@ class ContinuousBatchingEngine:
         request.state = EVICTED
         request.finished_s = self.time_fn()
         self.stats.evicted += 1
+        self._m_evicted.inc()
         return request
 
     def _finish(self, request: Request) -> None:
@@ -222,6 +245,7 @@ class ContinuousBatchingEngine:
         request.state = FINISHED
         request.finished_s = self.time_fn()
         self.stats.finished += 1
+        self._m_finished.inc()
 
     # -- admission (tick phase 1) ----------------------------------------------
     def _admit(self) -> list[Sample]:
@@ -323,6 +347,7 @@ class ContinuousBatchingEngine:
             request = sample.payload
             request.state = RUNNING
             request.first_token_s = now
+            self._m_ttft.observe(now - request.submitted_s)
             token = int(first[request.slot])
             request.generated = [token]
             self.slots.lengths[request.slot] = request.prompt_len
@@ -365,11 +390,19 @@ class ContinuousBatchingEngine:
 
     # -- scheduler -------------------------------------------------------------
     def tick(self) -> None:
-        cohort = self._admit()
-        if cohort:
-            self._prefill(cohort)
-        self._decode()
+        with obs.span("serve/tick", cat="serve", tick=self.stats.ticks):
+            with obs.span("serve/admit", cat="serve"):
+                cohort = self._admit()
+            if cohort:
+                with obs.span("serve/prefill", cat="serve", cohort=len(cohort)):
+                    self._prefill(cohort)
+                self._m_admitted.inc(len(cohort))
+            with obs.span("serve/decode", cat="serve"):
+                self._decode()
         self.stats.ticks += 1
+        self._m_ticks.inc()
+        self._m_occupancy.set(self.slots.active_count / self.config.num_slots)
+        self._m_queue_depth.set(len(self.waiting) + self.window.remaining(0))
         self.stats.peak_projected_tokens = max(
             self.stats.peak_projected_tokens, self.slots.projected_in_flight()
         )

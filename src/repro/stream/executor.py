@@ -29,6 +29,7 @@ import dataclasses
 import threading
 from typing import Iterator
 
+from repro import obs
 from repro.core.grouping import Group
 from repro.core.protocol import (
     EpochAudit,
@@ -105,6 +106,13 @@ class StreamExecutor:
         # a protocol round snapshots a step boundary, never a torn mid-round
         # state (the resume guarantee depends on this).
         self._lock = threading.RLock()
+        # Per-epoch DGAP round audit (DESIGN.md §13.3): every protocol round
+        # and every iteration closure lands here via the engine/runner hooks;
+        # checkpoint() serializes it so a resumed run's audit is continuous.
+        self.telemetry = obs.RoundTimeline(world_size)
+        self._m_steps = obs.counter(
+            "odb_stream_steps_total", help="aligned steps delivered by the executor"
+        )
         self.runner = EpochRunner(
             self._make_engine,
             n,
@@ -113,6 +121,16 @@ class StreamExecutor:
             max_logical_iterations=max_logical_iterations,
             incremental=True,
         )
+        self.runner.on_closure = self._on_closure
+
+    # -- telemetry hooks -------------------------------------------------------
+    def _on_round(self, record) -> None:
+        self.telemetry.record_round(
+            record, record.duration_s, self.runner.iteration
+        )
+
+    def _on_closure(self, event: str, iteration: int, rounds: int) -> None:
+        self.telemetry.record_closure(event, iteration, rounds)
 
     # -- iteration factory -----------------------------------------------------
     def _make_window(self, iteration: int) -> AdmissionWindow:
@@ -137,18 +155,24 @@ class StreamExecutor:
         # O(lookahead/W) views per rank per round, so the Theorem-4 guard
         # widens from q + O(D) to q + O(D) + O(M) — still a hard finite
         # envelope, just sized for the throttled regime.
-        return OdbProtocolEngine(
+        engine = OdbProtocolEngine(
             [[] for _ in range(self.spec.world_size)],
             self.config,
             source=window,
             quota_hint=self.spec.per_rank_quota,
             round_margin=64 + self.spec.total_views,
         )
+        engine.on_round = self._on_round
+        return engine
 
     # -- trainer-facing surface ------------------------------------------------
     def step(self) -> list[Group | None] | None:
         with self._lock:
-            return self.runner.step()
+            with obs.span("stream/step", cat="stream"):
+                out = self.runner.step()
+            if out is not None:
+                self._m_steps.inc()
+            return out
 
     def steps(self) -> Iterator[list[Group | None]]:
         while True:
@@ -241,6 +265,14 @@ class StreamExecutor:
                 if engine is None and self.window is not None
                 else []
             ),
+            # Telemetry rides along (optional key, read back with .get() so
+            # pre-telemetry checkpoints still resume): the round audit plus
+            # the odb_* counter families, so a resumed run *continues* the
+            # counters instead of restarting them at zero.
+            "telemetry": {
+                "rounds": self.telemetry.as_dict(),
+                "counters": obs.default_registry().state(prefix="odb_"),
+            },
         }
         return StreamCheckpoint(payload)
 
@@ -298,6 +330,10 @@ class StreamExecutor:
         ex._closed_window_stats = [
             WindowStats(**st) for st in p.get("closed_window_stats", [])
         ]
+        telemetry = p.get("telemetry")
+        if telemetry is not None:
+            ex.telemetry = obs.RoundTimeline.from_dict(telemetry["rounds"])
+            obs.default_registry().load_state(telemetry["counters"])
         if p["engine"] is not None:
             window = ex._make_window(rs["iteration"])
             window.load_state_dict(p["window"])

@@ -29,6 +29,8 @@ import threading
 import time
 from typing import Generic, Iterable, Iterator, TypeVar
 
+from repro import obs
+
 T = TypeVar("T")
 
 _END = object()
@@ -73,6 +75,21 @@ class PrefetchIterator(Generic[T]):
         self.depth = depth
         self._stage = stage
         self.stats = PrefetchStats()
+        # Telemetry (DESIGN.md §13): hit/miss split + queue depth + stall time.
+        self._m_hits = obs.counter(
+            "odb_prefetch_hits_total", help="get() satisfied without blocking"
+        )
+        self._m_misses = obs.counter(
+            "odb_prefetch_misses_total", help="consumer waited on the producer"
+        )
+        self._m_wait = obs.counter(
+            "odb_prefetch_wait_seconds_total",
+            help="total consumer stall time",
+            unit="seconds",
+        )
+        self._m_depth = obs.gauge(
+            "odb_prefetch_queue_depth", help="staged items at last delivery"
+        )
         self._queue: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._finished = False  # _END consumed, error raised, or closed
@@ -95,6 +112,7 @@ class PrefetchIterator(Generic[T]):
 
     def _produce(self, it: Iterator[T]) -> None:
         try:
+            tracer = obs.default_tracer()
             while not self._stop.is_set():
                 t0 = time.perf_counter()
                 try:
@@ -103,7 +121,12 @@ class PrefetchIterator(Generic[T]):
                     break
                 if self._stage is not None:
                     item = self._stage(item)
-                self.stats.produce_s += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                self.stats.produce_s += dt
+                tracer.complete(
+                    "prefetch/produce", t0, dt, cat="prefetch",
+                    item=self.stats.produced,
+                )
                 if not self._put(item):
                     return
                 self.stats.produced += 1
@@ -134,7 +157,12 @@ class PrefetchIterator(Generic[T]):
                     if self._finished or not self._thread.is_alive():
                         self._finished = True
                         raise StopIteration from None
-            self.stats.wait_s += time.perf_counter() - t0
+            waited = time.perf_counter() - t0
+            self.stats.wait_s += waited
+            self._m_wait.inc(waited)
+            obs.default_tracer().complete(
+                "prefetch/wait", t0, waited, cat="prefetch"
+            )
         if item is _END:
             # The terminal sentinel is not a data request; don't score it.
             self._finished = True
@@ -144,9 +172,12 @@ class PrefetchIterator(Generic[T]):
             raise StopIteration
         if hit:
             self.stats.hits += 1
+            self._m_hits.inc()
         else:
             self.stats.misses += 1
+            self._m_misses.inc()
         self.stats.consumed += 1
+        self._m_depth.set(self._queue.qsize())
         return item
 
     def close(self, timeout: float | None = None) -> None:

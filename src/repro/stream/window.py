@@ -34,6 +34,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 
+from repro import obs
 from repro.core.grouping import Sample
 from repro.core.protocol import ViewSource
 from repro.data.pipeline import PipelinePolicy, RawRecord, run_pipeline
@@ -86,6 +87,21 @@ class BoundedWindow(ViewSource):
         ]
         self.delivered_per_rank = [0] * world_size
         self.stats = WindowStats()
+        # Telemetry (DESIGN.md §13): instruments cached at construction so the
+        # per-view hot path is one attribute call on a plain-slot object.
+        self._m_realized = obs.counter(
+            "odb_window_realized_total", help="views pushed through realization"
+        )
+        self._m_delivered = obs.counter(
+            "odb_window_delivered_total", help="views handed to the engine"
+        )
+        self._m_refusals = obs.counter(
+            "odb_window_refusals_total",
+            help="take() calls throttled by the lookahead budget",
+        )
+        self._m_resident = obs.gauge(
+            "odb_window_resident", help="realized-but-undelivered views resident now"
+        )
 
     # -- order interface (subclass responsibility) -----------------------------
     def order_size(self) -> int:  # pragma: no cover
@@ -108,6 +124,7 @@ class BoundedWindow(ViewSource):
         self.resident += 1
         self.stats.realized += 1
         self.stats.peak_resident = max(self.stats.peak_resident, self.resident)
+        self._m_realized.inc()
 
     # -- ViewSource interface --------------------------------------------------
     def take(self, rank: int, k: int) -> list[Sample]:
@@ -120,12 +137,15 @@ class BoundedWindow(ViewSource):
             self._admit_one()
         if throttled and len(dq) < k:
             self.stats.refusals += 1
+            self._m_refusals.inc()
         out: list[Sample] = []
         while dq and len(out) < k:
             out.append(dq.popleft())
         self.resident -= len(out)
         self.delivered_per_rank[rank] += len(out)
         self.stats.delivered += len(out)
+        self._m_delivered.inc(len(out))
+        self._m_resident.set(self.resident)
         return out
 
     def exhausted(self, rank: int) -> bool:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core.layout import (
     BatchLayout,
     global_batch_arrays,
@@ -89,6 +90,13 @@ def make_train_step(model: LM, opt_cfg: OptimizerConfig):
     """
 
     def train_step(state, batch):
+        # Executes at trace time only, so the counter is a compile-event
+        # census: one tick per (shape, layout) specialization XLA builds.
+        obs.counter(
+            "train_compile_events_total", help="train_step trace/compile events"
+        ).inc()
+        obs.instant("train/compile", cat="train")
+
         def loss_fn(params):
             loss_sum, tokens = model.loss_sums(params, batch)
             return loss_sum / jnp.maximum(tokens, 1.0), tokens
@@ -105,6 +113,16 @@ def make_train_step(model: LM, opt_cfg: OptimizerConfig):
     return train_step
 
 
+def _timed_phase(span_name: str, metric: str, help: str, fn: Callable):
+    """Run one step phase under a trace span + cumulative seconds counter."""
+    t0 = time.perf_counter()
+    out = fn()
+    dt = time.perf_counter() - t0
+    obs.counter(metric, help=help, unit="seconds").inc(dt)
+    obs.default_tracer().complete(span_name, t0, dt, cat="train")
+    return out
+
+
 def assemble_model_batch(loader_step: LoaderStep, layout: BatchLayout) -> dict:
     """Turn one aligned LoaderStep into the jitted-step batch dict.
 
@@ -117,8 +135,16 @@ def assemble_model_batch(loader_step: LoaderStep, layout: BatchLayout) -> dict:
     """
     arrays = loader_step.device
     if arrays is None:
-        host = global_batch_arrays(loader_step.batches, layout)
-        arrays = {k: jnp.asarray(v) for k, v in host.items()}
+        host = _timed_phase(
+            "train/pad", "train_pad_seconds_total",
+            "host-side batch padding/assembly time",
+            lambda: global_batch_arrays(loader_step.batches, layout),
+        )
+        arrays = _timed_phase(
+            "train/device_put", "train_device_put_seconds_total",
+            "host-to-device transfer dispatch time",
+            lambda: {k: jnp.asarray(v) for k, v in host.items()},
+        )
     tokens = arrays["tokens"]
     if layout.needs_segments:
         segments = arrays["segments"]
@@ -218,29 +244,57 @@ class Trainer:
         step_idx = start_step
         t0 = time.perf_counter()
         emitted = 0
-        for loader_step in self._epoch_steps(epoch):
+        tokens_seen = 0
+        tracer = obs.default_tracer()
+        m_steps = obs.counter("train_steps_total", help="optimizer steps run")
+        m_tokens = obs.counter("train_tokens_total", help="real tokens trained on")
+        m_step_dur = obs.histogram(
+            "train_step_duration_seconds",
+            help="wall time of one full train step (realize+pad+put+compute)",
+            unit="seconds",
+        )
+        step_iter = iter(self._epoch_steps(epoch))
+        while True:
+            step_t0 = time.perf_counter()
+            # Realize: pull the next aligned step out of the data path
+            # (admission + protocol rounds + layout, or a prefetch dequeue).
+            loader_step = _timed_phase(
+                "train/realize", "train_realize_seconds_total",
+                "data-path time to the next aligned step",
+                lambda: next(step_iter, None),
+            )
+            if loader_step is None:
+                break
             batch = assemble_model_batch(loader_step, self.loader.layout)
-            state, metrics = self._train_step(state, batch)
+
+            def _compute():
+                new_state, metrics = self._train_step(state, batch)
+                if tracer.enabled:
+                    # Async dispatch would end the span at enqueue time;
+                    # only force completion when someone is looking.
+                    jax.block_until_ready(metrics["loss"])
+                return new_state, metrics
+
+            state, metrics = _timed_phase(
+                "train/compute", "train_compute_seconds_total",
+                "jitted train_step time (dispatch; synced when tracing)",
+                _compute,
+            )
             step_idx += 1
             emitted += loader_step.metadata.emitted_samples
+            tokens_seen += loader_step.metadata.total_tokens
+            step_dt = time.perf_counter() - step_t0
+            m_steps.inc()
+            m_tokens.inc(loader_step.metadata.total_tokens)
+            m_step_dur.observe(step_dt)
+            tracer.complete(
+                "train/step", step_t0, step_dt, cat="train", step=step_idx
+            )
             if step_idx % self.cfg.log_every == 0:
                 dt = time.perf_counter() - t0
-                rec = {
-                    "step": step_idx,
-                    "loss": float(metrics["loss"]),
-                    "tokens": float(metrics["tokens"]),
-                    "grad_norm": float(metrics["grad_norm"]),
-                    "emitted_samples": emitted,
-                    "sam_per_s": emitted / dt if dt > 0 else 0.0,
-                    "padding": loader_step.metadata.padding_fraction,
-                    "device_padding": (
-                        1.0
-                        - loader_step.metadata.total_tokens
-                        / loader_step.device_tokens
-                        if loader_step.device_tokens
-                        else 0.0
-                    ),
-                }
+                rec = self._publish_log_record(
+                    metrics, loader_step, step_idx, emitted, tokens_seen, dt
+                )
                 self.history.append(rec)
             if (
                 self.cfg.checkpoint_dir
@@ -253,6 +307,54 @@ class Trainer:
             if self.cfg.max_steps and step_idx >= self.cfg.max_steps:
                 break
         return state, step_idx
+
+    def _publish_log_record(
+        self, metrics, loader_step, step_idx: int, emitted: int,
+        tokens_seen: int, dt: float,
+    ) -> dict:
+        """Publish step metrics to the registry and return the log record.
+
+        One value set feeds the registry gauges, ``self.history`` and the
+        stdout line (:meth:`format_log_line`) — the record is a *view* of the
+        same snapshot ``metrics.json`` serializes, not a second bookkeeping
+        path (satellite: no more ad-hoc log dict).
+        """
+        values = {
+            "train_loss": float(metrics["loss"]),
+            "train_step_tokens": float(metrics["tokens"]),
+            "train_grad_norm": float(metrics["grad_norm"]),
+            "train_samples_per_second": emitted / dt if dt > 0 else 0.0,
+            "train_tokens_per_second": tokens_seen / dt if dt > 0 else 0.0,
+            "train_batch_padding": loader_step.metadata.padding_fraction,
+            "train_device_padding": (
+                1.0 - loader_step.metadata.total_tokens / loader_step.device_tokens
+                if loader_step.device_tokens
+                else 0.0
+            ),
+        }
+        reg = obs.default_registry()
+        for name, value in values.items():
+            reg.gauge(name).set(value)
+        return {
+            "step": step_idx,
+            "loss": values["train_loss"],
+            "tokens": values["train_step_tokens"],
+            "grad_norm": values["train_grad_norm"],
+            "emitted_samples": emitted,
+            "sam_per_s": values["train_samples_per_second"],
+            "padding": values["train_batch_padding"],
+            "device_padding": values["train_device_padding"],
+        }
+
+    @staticmethod
+    def format_log_line(rec: dict) -> str:
+        """Render one history record (the stdout view of the same snapshot)."""
+        return (
+            f"step {rec['step']:>6}  loss {rec['loss']:.4f}  "
+            f"tokens {rec['tokens']:>8.0f}  grad_norm {rec['grad_norm']:.3f}  "
+            f"sam/s {rec['sam_per_s']:.1f}  pad {rec['padding']:.3f}  "
+            f"dev_pad {rec['device_padding']:.3f}"
+        )
 
 
 # -----------------------------------------------------------------------------

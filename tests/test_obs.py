@@ -1,0 +1,345 @@
+"""Observability subsystem (DESIGN.md §13).
+
+Contracts under test:
+
+  1. **Registry semantics** — counter monotonicity, gauge last-write,
+     histogram explicit-bucket binning, labeled children, kind conflicts;
+  2. **Disabled is free** — a disabled registry hands back the one shared
+     NULL sink (no allocation), a disabled tracer the one shared NULL_SPAN;
+  3. **Views** — Prometheus text exposition golden, flat() naming;
+  4. **Trace** — span nesting by containment, bounded ring with accounted
+     drops, Chrome trace-event JSON schema validity;
+  5. **Checkpoint round-trip** — registry state()/load_state() and the
+     RoundTimeline survive JSON; the stream checkpoint carries counters so a
+     resumed run continues them instead of restarting at zero.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+
+import pytest
+
+from repro import obs
+from repro.core import OdbConfig
+from repro.core.protocol import RoundRecord
+from repro.data.datasets import _records_from_lengths
+from repro.data.pipeline import PipelinePolicy
+from repro.obs import (
+    NULL,
+    NULL_SPAN,
+    MetricsRegistry,
+    RoundTimeline,
+    RunReporter,
+    SpanTracer,
+)
+from repro.stream import StreamCheckpoint, StreamExecutor
+
+POLICY = PipelinePolicy()
+
+
+def make_records(n: int, seed: int = 0, lo: int = 16, hi: int = 900):
+    rng = random.Random(seed)
+    return _records_from_lengths([rng.randint(lo, hi) for _ in range(n)])
+
+
+def small_cfg(**kw) -> OdbConfig:
+    base = dict(l_max=1024, buffer_size=16, prefetch_factor=8, num_workers=1)
+    base.update(kw)
+    return OdbConfig(**base)
+
+
+@pytest.fixture(autouse=True)
+def clean_defaults():
+    """Tests below mutate the process-wide registry/tracer: isolate them."""
+    reg, tracer = obs.default_registry(), obs.default_tracer()
+    reg.reset()
+    reg.enable()
+    tracer.reset()
+    tracer.disable()
+    yield
+    reg.reset()
+    reg.enable()
+    tracer.reset()
+    tracer.disable()
+
+
+class TestRegistry:
+    def test_counter_monotone(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x_total")
+        c.inc()
+        c.inc(2.5)
+        assert c.value == 3.5
+        with pytest.raises(ValueError, match=">= 0"):
+            c.inc(-1)
+
+    def test_gauge_last_write(self):
+        g = MetricsRegistry().gauge("x")
+        g.set(4)
+        g.inc()
+        g.dec(2)
+        assert g.value == 3.0
+
+    def test_histogram_binning(self):
+        h = MetricsRegistry().histogram("lat", buckets=(1.0, 2.0))
+        for v in (0.5, 1.0, 2.0, 4.0):  # le semantics: 1.0 lands in le="1"
+            h.observe(v)
+        assert h.sample() == {
+            "count": 4,
+            "sum": 7.5,
+            "buckets": {"1": 2, "2": 3, "+Inf": 4},
+        }
+
+    def test_histogram_rejects_bad_buckets(self):
+        with pytest.raises(ValueError, match="increasing"):
+            MetricsRegistry().histogram("h", buckets=(2.0, 1.0))
+        with pytest.raises(ValueError, match="increasing"):
+            MetricsRegistry().histogram("h2", buckets=(1.0, 1.0))
+
+    def test_labels_make_distinct_children(self):
+        reg = MetricsRegistry()
+        a = reg.counter("req_total", route="a")
+        b = reg.counter("req_total", route="b")
+        assert a is not b
+        assert reg.counter("req_total", route="a") is a  # stable lookup
+        a.inc(2)
+        b.inc()
+        assert reg.flat() == {
+            'req_total{route="a"}': 2.0,
+            'req_total{route="b"}': 1.0,
+        }
+
+    def test_kind_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.gauge("x")
+
+    def test_disabled_returns_shared_null_sink(self):
+        reg = MetricsRegistry(enabled=False)
+        c = reg.counter("x_total")
+        assert c is NULL  # zero allocation on the disabled path
+        c.inc()
+        c.observe(1)
+        c.set(5)
+        assert c.value == 0.0
+        assert reg.snapshot() == {}
+        reg.enable()
+        assert reg.counter("x_total") is not NULL
+
+    def test_prometheus_text_golden(self):
+        reg = MetricsRegistry()
+        reg.counter("req_total", help="requests", route="a").inc(3)
+        reg.gauge("temp").set(1.5)
+        h = reg.histogram("lat_seconds", buckets=(1.0, 2.0), help="latency",
+                          unit="seconds")
+        for v in (0.5, 2.0, 4.0):
+            h.observe(v)
+        assert reg.prometheus_text() == (
+            "# HELP lat_seconds latency\n"
+            "# UNIT lat_seconds seconds\n"
+            "# TYPE lat_seconds histogram\n"
+            'lat_seconds_bucket{le="1"} 1\n'
+            'lat_seconds_bucket{le="2"} 2\n'
+            'lat_seconds_bucket{le="+Inf"} 3\n'
+            "lat_seconds_sum 6.5\n"
+            "lat_seconds_count 3\n"
+            "# HELP req_total requests\n"
+            "# TYPE req_total counter\n"
+            'req_total{route="a"} 3\n'
+            "# TYPE temp gauge\n"
+            "temp 1.5\n"
+        )
+
+    def test_state_round_trip_through_json(self):
+        reg = MetricsRegistry()
+        reg.counter("a_total", lbl="x").inc(7)
+        reg.gauge("g").set(-2.5)
+        h = reg.histogram("h_seconds", buckets=(0.1, 1.0))
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(3.0)
+        blob = json.dumps(reg.state())
+        fresh = MetricsRegistry()
+        fresh.load_state(json.loads(blob))
+        assert fresh.flat() == reg.flat()
+        # Per-bin counts (not just the flat cumulative view) must survive.
+        restored = fresh.histogram("h_seconds", buckets=(0.1, 1.0))
+        assert restored.counts == h.counts
+        # load_state is a no-op on a disabled registry (nothing to bind to).
+        off = MetricsRegistry(enabled=False)
+        off.load_state(json.loads(blob))
+        assert off.snapshot() == {}
+
+    def test_state_prefix_filter(self):
+        reg = MetricsRegistry()
+        reg.counter("odb_x_total").inc()
+        reg.counter("train_y_total").inc()
+        assert set(reg.state(prefix="odb_")) == {"odb_x_total"}
+
+
+class TestTracer:
+    def test_disabled_span_is_shared_null(self):
+        tracer = SpanTracer(enabled=False)
+        assert tracer.span("x") is NULL_SPAN
+        tracer.complete("x", 0.0, 1.0)
+        tracer.instant("x")
+        assert tracer.events() == []
+
+    def test_nesting_by_containment(self):
+        tracer = SpanTracer(enabled=True)
+        with tracer.span("outer", cat="t"):
+            with tracer.span("inner", cat="t", k=1):
+                pass
+        events = {e["name"]: e for e in tracer.events()}
+        outer, inner = events["outer"], events["inner"]
+        assert outer["ts"] <= inner["ts"]
+        assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+        assert inner["args"] == {"k": 1}
+
+    def test_ring_overflow_is_bounded_and_accounted(self):
+        tracer = SpanTracer(capacity=4, enabled=True)
+        for i in range(10):
+            tracer.instant(f"e{i}")
+        assert len(tracer.events()) == 4
+        assert tracer.dropped == 6
+        # Oldest dropped: the tail of the run is what survives.
+        assert [e["name"] for e in tracer.events()] == ["e6", "e7", "e8", "e9"]
+        assert tracer.export()["otherData"]["dropped_events"] == 6
+
+    def test_chrome_trace_schema(self, tmp_path):
+        tracer = SpanTracer(enabled=True)
+        with tracer.span("a", cat="test"):
+            tracer.instant("mark", cat="test", n=3)
+        path = tracer.write(tmp_path / "trace.json")
+        doc = json.loads(path.read_text())  # must be valid JSON end-to-end
+        assert doc["displayTimeUnit"] == "ms"
+        assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+        for e in doc["traceEvents"]:
+            assert {"name", "ph", "ts", "pid", "tid"} <= e.keys()
+            assert e["ph"] in ("X", "i")
+            if e["ph"] == "X":
+                assert e["dur"] >= 0
+            else:
+                assert e["s"] == "t"
+
+    def test_capacity_validated(self):
+        with pytest.raises(ValueError, match="capacity"):
+            SpanTracer(capacity=0)
+
+
+class TestRoundTimeline:
+    @staticmethod
+    def _record(i, target, statuses, views):
+        return RoundRecord(
+            round_index=i, statuses=tuple(statuses),
+            idx_budgets=tuple(0 for _ in statuses), target=target,
+            emitted_views=views, skip_output=False, second_gather=False,
+            potential=target,
+        )
+
+    def test_straggler_census_and_round_trip(self):
+        tl = RoundTimeline(world_size=2)
+        tl.record_round(self._record(0, 3, (3, 0), 2), 0.002, iteration=0)
+        tl.record_round(self._record(1, 0, (0, 0), 0), 0.0001, iteration=0)
+        tl.record_closure("join_all_finished", iteration=0, rounds=2)
+        d = tl.as_dict()
+        # Rank 1 straggled in round 0; the all-zero round is no straggle.
+        assert d["straggler_rounds_per_rank"] == [0, 1]
+        assert d["rounds"] == 2 and d["emitted_views"] == 2
+        assert d["closures"] == [
+            {"event": "join_all_finished", "iteration": 0, "iteration_rounds": 2}
+        ]
+        restored = RoundTimeline.from_dict(json.loads(json.dumps(d)))
+        assert restored.as_dict() == d
+
+    def test_records_window_is_bounded(self):
+        tl = RoundTimeline(world_size=1, keep_records=3)
+        for i in range(5):
+            tl.record_round(self._record(i, 1, (1,), 1), 0.001, iteration=0)
+        assert len(tl.records) == 3
+        assert tl.records_dropped == 2
+        assert [r["round"] for r in tl.records] == [2, 3, 4]
+        assert tl.rounds == 5  # aggregates keep counting past the window
+
+
+class TestCheckpointCarriesTelemetry:
+    def test_stream_resume_continues_counters(self):
+        """The full persistence path: executor counters + round audit ride the
+        stream checkpoint through JSON and resume into a fresh registry."""
+        reg = obs.default_registry()
+        records = make_records(120, 7)
+        full = len(list(StreamExecutor(records, POLICY, 2, small_cfg(), seed=5).steps()))
+        reg.reset()
+
+        ex = StreamExecutor(records, POLICY, 2, small_cfg(), seed=5)
+        for _ in range(3):
+            assert ex.step() is not None
+        blob = ex.checkpoint().to_json()
+        assert reg.flat()["odb_stream_steps_total"] == 3
+        rounds_at_cut = ex.telemetry.rounds
+        assert rounds_at_cut > 0
+
+        reg.reset()  # simulate a fresh process after preemption
+        resumed = StreamExecutor.resume(
+            StreamCheckpoint.from_json(blob), records, POLICY
+        )
+        flat = reg.flat()
+        assert flat["odb_stream_steps_total"] == 3  # restored, not zeroed
+        assert flat["odb_protocol_rounds_total"] >= rounds_at_cut
+        assert resumed.telemetry.rounds == rounds_at_cut
+        tail = list(resumed.steps())
+        assert reg.flat()["odb_stream_steps_total"] == 3 + len(tail) == full
+
+    def test_round_timeline_rides_checkpoint_payload(self):
+        ex = StreamExecutor(make_records(60, 3), POLICY, 2, small_cfg(), seed=1)
+        ex.step()
+        payload = ex.checkpoint().payload
+        assert payload["telemetry"]["rounds"]["rounds"] == ex.telemetry.rounds
+        assert "odb_stream_steps_total" in payload["telemetry"]["counters"]
+
+
+class TestReporter:
+    def test_reporter_writes_all_artifacts(self, tmp_path):
+        reg = MetricsRegistry()
+        tracer = SpanTracer(enabled=True)
+        reg.counter("odb_x_total").inc(4)
+        with tracer.span("phase"):
+            pass
+        tl = RoundTimeline(world_size=1)
+        reporter = RunReporter(tmp_path, registry=reg, tracer=tracer)
+        paths = reporter.write(round_audit=tl, extra={"arch": "t"})
+        assert set(paths) == {"metrics", "prometheus", "trace", "rounds"}
+        metrics = json.loads((tmp_path / "metrics.json").read_text())
+        assert metrics["flat"]["odb_x_total"] == 4.0
+        assert metrics["run"] == {"arch": "t"}
+        assert "odb_x_total 4" in (tmp_path / "metrics.prom").read_text()
+        trace = json.loads((tmp_path / "trace.json").read_text())
+        assert [e["name"] for e in trace["traceEvents"]] == ["phase"]
+        assert json.loads((tmp_path / "rounds.json").read_text())["rounds"] == 0
+
+    def test_enable_telemetry_switches_defaults_on(self, tmp_path):
+        reg, tracer = obs.default_registry(), obs.default_tracer()
+        reg.disable()
+        assert not tracer.enabled
+        reporter = obs.enable_telemetry(tmp_path)
+        assert reg.enabled and tracer.enabled
+        assert reporter.registry is reg and reporter.tracer is tracer
+
+
+class TestModuleConveniences:
+    def test_module_level_helpers_hit_defaults(self):
+        obs.counter("conv_total").inc()
+        obs.gauge("conv_g").set(2)
+        obs.histogram("conv_h", buckets=(1.0,)).observe(0.5)
+        flat = obs.default_registry().flat()
+        assert flat["conv_total"] == 1.0
+        assert flat["conv_g"] == 2.0
+        assert flat["conv_h_count"] == 1
+        obs.default_tracer().enable()
+        with obs.span("conv/span"):
+            obs.instant("conv/mark")
+        names = {e["name"] for e in obs.default_tracer().events()}
+        assert {"conv/span", "conv/mark"} <= names

@@ -270,3 +270,48 @@ class TestCompileOnce:
         if mla_cfg.attn_kind == "mla":
             with pytest.raises(NotImplementedError, match="GQA"):
                 ContinuousBatchingEngine(LM(mla_cfg), None, CONFIG)
+
+
+class TestTelemetry:
+    """One engine tick must emit the documented span + metric set
+    (DESIGN.md §13)."""
+
+    def test_one_tick_emits_documented_spans_and_metrics(self, served):
+        from repro import obs
+
+        reg, tracer = obs.default_registry(), obs.default_tracer()
+        reg.reset()
+        tracer.reset()
+        tracer.enable()
+        try:
+            # Constructed AFTER reset/enable: the engine caches its
+            # instruments at construction.
+            engine = make_engine(served)
+            for prompt, new in synth_requests(served[0], 2, seed=5):
+                engine.submit(prompt, new)
+            engine.tick()
+            flat = reg.flat()
+            assert flat["serve_ticks_total"] == 1
+            assert flat["serve_admitted_total"] >= 1
+            assert flat["serve_ttft_seconds_count"] >= 1
+            assert 0 < flat["serve_slot_occupancy"] <= 1
+            assert "serve_queue_depth" in flat
+            events = tracer.events()
+            names = {e["name"] for e in events}
+            assert {
+                "serve/tick", "serve/admit", "serve/prefill", "serve/decode"
+            } <= names
+            # Phases nest inside the tick span (containment = nesting).
+            tick = [e for e in events if e["name"] == "serve/tick"][-1]
+            for inner_name in ("serve/admit", "serve/prefill", "serve/decode"):
+                inner = [e for e in events if e["name"] == inner_name][-1]
+                assert tick["ts"] <= inner["ts"]
+                assert (
+                    inner["ts"] + inner["dur"]
+                    <= tick["ts"] + tick["dur"] + 1e-3
+                )
+        finally:
+            reg.reset()
+            reg.enable()
+            tracer.reset()
+            tracer.disable()

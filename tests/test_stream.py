@@ -473,3 +473,50 @@ class TestEmittedLedgerBitmap:
         n = ex.spec.dataset_size
         assert len(bitmap) <= 2 * ((n + 7) // 8)
         assert ex.runner.emitted_total >= n  # quota met, ledger still O(N/8)
+
+
+class TestTelemetry:
+    """One streaming step must emit the documented span + metric set
+    (DESIGN.md §13): the CI artifact checks assert over full runs; this is
+    the per-round unit contract."""
+
+    def test_one_step_emits_documented_spans_and_metrics(self):
+        from repro import obs
+
+        reg, tracer = obs.default_registry(), obs.default_tracer()
+        reg.reset()
+        tracer.reset()
+        tracer.enable()
+        try:
+            # Constructed AFTER reset/enable: instruments are cached at
+            # construction and must bind to the live registry.
+            ex = StreamExecutor(
+                make_records(60, 9), POLICY, 2, small_cfg(), seed=2
+            )
+            assert ex.step() is not None
+            flat = reg.flat()
+            assert flat["odb_stream_steps_total"] == 1
+            assert flat["odb_protocol_rounds_total"] >= 1
+            assert flat["odb_window_realized_total"] > 0
+            assert flat["odb_window_delivered_total"] > 0
+            assert (
+                flat["odb_protocol_round_duration_seconds_count"]
+                == flat["odb_protocol_rounds_total"]
+            )
+            # The executor's round audit and the registry agree.
+            assert ex.telemetry.rounds == int(flat["odb_protocol_rounds_total"])
+            names = {e["name"] for e in tracer.events()}
+            assert {"stream/step", "dgap/round"} <= names
+            # Protocol rounds nest inside the stream/step span (containment).
+            step = [e for e in tracer.events() if e["name"] == "stream/step"][-1]
+            rounds = [e for e in tracer.events() if e["name"] == "dgap/round"]
+            assert any(
+                step["ts"] <= r["ts"]
+                and r["ts"] + r["dur"] <= step["ts"] + step["dur"] + 1e-3
+                for r in rounds
+            )
+        finally:
+            reg.reset()
+            reg.enable()
+            tracer.reset()
+            tracer.disable()
