@@ -36,3 +36,6 @@ lint:  ## no third-party linter in the container: syntax-check everything
 train-smoke:
 	$(PP) $(PY) -m repro.launch.train --arch qwen3_0_6b --smoke --steps 8 \
 	  --world 2 --l-max 1024 --buffer 32 --prefetch 8 --data-scale 0.0005
+	$(PP) $(PY) -m repro.launch.train --arch qwen3_0_6b --smoke --steps 8 \
+	  --world 2 --l-max 1024 --buffer 32 --prefetch 8 --data-scale 0.0005 \
+	  --num-workers 2

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import time
 
@@ -31,7 +32,7 @@ from repro.core import BucketSpec, OdbConfig
 from repro.data import OnlineDynamicLoader, get_dataset
 
 
-def _consume(step_iter, step_cost: float) -> dict:
+def _consume(step_iter, step_cost: float, digest=None) -> dict:
     steps = 0
     samples = 0
     it = iter(step_iter)
@@ -41,6 +42,11 @@ def _consume(step_iter, step_cost: float) -> dict:
         while loader_step is not None:
             steps += 1
             samples += loader_step.metadata.emitted_samples
+            if digest is not None:  # bit-exactness rail across data paths
+                for b in loader_step.batches:
+                    digest.update(b.tokens.tobytes())
+                    digest.update(b.loss_mask.tobytes())
+                    digest.update(b.lengths.tobytes())
             if step_cost > 0:
                 time.sleep(step_cost)  # stand-in for the jitted train step
             loader_step = next(it, None)
@@ -108,6 +114,124 @@ def bench_paths(
     return rows
 
 
+def bench_workers(
+    dataset: str = "longtail",
+    *,
+    data_scale: float = 16.0,
+    world: int = 8,
+    l_max: int = 16384,
+    buffer_size: int = 256,
+    lookahead: int | None = None,
+    step_cost: float = 0.0,
+    worker_counts: tuple[int, ...] = (0, 2, 4),
+    seed: int = 0,
+    repeats: int = 2,
+) -> dict:
+    """Multi-process realization workers (DESIGN.md §14): ``nw`` sweep.
+
+    Profile: the longtail length mix under the *packed* layout at a large
+    per-rank token budget (8 ranks x 16k tokens) — per-step realization
+    there is a pure-Python packing plan (row-capacity grid search x
+    first-fit) plus padding/token synthesis over ~2 MB of arrays, i.e.
+    exactly the GIL-bound work the in-process prefetch thread cannot
+    overlap with the protocol (measured here: build dominates protocol
+    ~3:1 per step).  ``nw=0`` is the in-process prefetch path; ``nw>0``
+    ships that work to spawned workers staging through the shared-memory
+    ring.
+
+    Reported per arm: steady steps/s, wall, producer-stall time (consumer
+    ``wait_s``), and a sha256 digest over every delivered array —
+    ``workers_equal`` asserts the worker stream is bit-identical to the
+    in-process one (acceptance rail, checked in CI).
+
+    The *speedup* rail (nw=2 >= 1.15x nw=0) is hardware-conditional: worker
+    processes parallelize CPU-bound realization, so the win only exists when
+    the host has cores for parent + workers to run concurrently.  The artifact
+    records ``cpu_count`` and a ``speedup_rail`` verdict; CI enforces the
+    threshold only when ``cpu_count >= 3`` and otherwise keeps the measurement
+    informational (a single-core host serializes everything and can only show
+    IPC overhead — the bit-exactness rail still holds there).
+    """
+    import hashlib
+
+    def make_loader() -> OnlineDynamicLoader:
+        ds = get_dataset(dataset, scale=data_scale)
+        return OnlineDynamicLoader(
+            ds,
+            world_size=world,
+            config=OdbConfig(
+                l_max=l_max, buffer_size=buffer_size,
+                prefetch_factor=32, num_workers=2,
+            ),
+            bucket_spec=BucketSpec(min_len=64, max_len=16384, max_count=1024),
+            layout="packed",
+            seed=seed,
+        )
+
+    sweep: dict[str, dict] = {}
+    digests: dict[int, str] = {}
+    for nw in worker_counts:
+        best: dict | None = None
+        for _ in range(max(1, repeats)):
+            loader = make_loader()
+            digest = hashlib.sha256()
+            row = _consume(
+                loader.streaming_epoch(
+                    0, lookahead=lookahead, prefetch=True, num_workers=nw
+                ),
+                step_cost,
+                digest=digest,
+            )
+            digests[nw] = digest.hexdigest()
+            if loader.last_prefetch_stats is not None:
+                row["producer_stall_s"] = loader.last_prefetch_stats.wait_s
+                row["hit_rate"] = loader.last_prefetch_stats.hit_rate
+            if loader.last_worker_stats is not None:
+                row["worker_stats"] = loader.last_worker_stats.as_dict()
+            if best is None or row["steady_steps_per_s"] > best["steady_steps_per_s"]:
+                best = row
+        sweep[str(nw)] = best
+
+    base = sweep.get("0", {}).get("steady_steps_per_s", 0.0)
+    for nw in worker_counts:
+        row = sweep[str(nw)]
+        row["digest_sha256"] = digests[nw]
+        row["speedup_vs_nw0"] = (
+            row["steady_steps_per_s"] / base if base > 0 else 0.0
+        )
+
+    try:
+        cpu_count = len(os.sched_getaffinity(0))
+    except AttributeError:  # non-Linux fallback
+        cpu_count = os.cpu_count() or 1
+    measured = sweep.get("2", {}).get("speedup_vs_nw0")
+    enforce = cpu_count >= 3 and measured is not None
+    speedup_rail = {
+        "threshold": 1.15,
+        "measured_nw2": measured,
+        "cpu_count": cpu_count,
+        "enforced": enforce,
+        "passed": (measured >= 1.15) if enforce else None,
+        "reason": (
+            "enforced: host has cores for parent + 2 workers"
+            if enforce
+            else f"informational: {cpu_count} core(s) cannot run parent and "
+            "workers concurrently, so CPU-bound realization cannot speed up"
+        ),
+    }
+    return {
+        "profile": {
+            "dataset": dataset, "data_scale": data_scale, "world": world,
+            "l_max": l_max, "buffer": buffer_size, "lookahead": lookahead,
+            "step_cost_s": step_cost, "layout": "packed",
+            "cpu_count": cpu_count,
+        },
+        "sweep": sweep,
+        "workers_equal": len(set(digests.values())) == 1,
+        "speedup_rail": speedup_rail,
+    }
+
+
 def bench_telemetry_overhead(
     make_loader, *, step_cost: float, lookahead: int | None, repeats: int = 2
 ) -> dict:
@@ -160,6 +284,16 @@ def main(argv=None) -> list[str]:
     ap.add_argument("--buffer", type=int, default=64)
     ap.add_argument("--lookahead", type=int, default=256)
     ap.add_argument("--step-cost", type=float, default=0.002)
+    ap.add_argument(
+        "--worker-scale", type=float, default=16.0,
+        help="longtail dataset scale for the worker (nw) sweep (large enough "
+             "that per-step realization dominates the protocol ~3:1)",
+    )
+    ap.add_argument(
+        "--worker-step-cost", type=float, default=0.0,
+        help="synthetic train-step cost for the worker sweep (0: the sweep "
+             "isolates data-side throughput, where the GIL bites)",
+    )
     args = ap.parse_args(argv)  # None -> sys.argv (standalone CLI)
 
     rows = bench_paths(
@@ -189,6 +323,14 @@ def main(argv=None) -> list[str]:
         make_loader, step_cost=args.step_cost, lookahead=args.lookahead
     )
 
+    # The worker sweep runs its own heavy-realization profile (8 ranks x 16k
+    # token budget) rather than inheriting the lighter CLI profile above —
+    # the nw comparison is only meaningful where per-step build dominates.
+    workers = bench_workers(
+        data_scale=args.worker_scale,
+        step_cost=args.worker_step_cost,
+    )
+
     lines = []
     for path, r in rows.items():
         derived = {
@@ -201,6 +343,18 @@ def main(argv=None) -> list[str]:
         if "peak_window" in r:
             derived["peak_window"] = r["peak_window"]
         lines.append(csv_line(f"streaming/{path}", 1e6 * r["wall_s"], derived))
+
+    for nw, r in workers["sweep"].items():
+        derived = {
+            "steps": r["steps"],
+            "steady_steps_per_s": f"{r['steady_steps_per_s']:.2f}",
+            "speedup_vs_nw0": f"{r['speedup_vs_nw0']:.3f}",
+        }
+        if "producer_stall_s" in r:
+            derived["producer_stall_s"] = f"{r['producer_stall_s']:.3f}"
+        lines.append(
+            csv_line(f"streaming/workers_nw{nw}", 1e6 * r["wall_s"], derived)
+        )
 
     lines.append(
         csv_line(
@@ -226,6 +380,7 @@ def main(argv=None) -> list[str]:
         },
         "paths": rows,
         "telemetry": overhead,
+        "workers": workers,
     }
     outdir = pathlib.Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)

@@ -89,6 +89,16 @@ class LoaderStep:
     # Optional device-resident global step arrays, populated by the prefetch
     # producer when device-put overlap is enabled (H2D hides under compute).
     device: dict | None = None
+    # Worker-path slot handle (DESIGN.md §14): with num_workers > 0 the
+    # batch arrays are zero-copy views over a shared-memory ring slot;
+    # calling ``release_slot`` recycles the slot.  The loader calls it at
+    # the consumer boundary (after the trainer finishes with the step);
+    # idempotent, and a no-op on the in-process path.
+    release: object = None
+
+    def release_slot(self) -> None:
+        if self.release is not None:
+            self.release()
 
     @property
     def device_tokens(self) -> int:
@@ -131,6 +141,7 @@ class OnlineDynamicLoader:
         self.last_audit: EpochAudit | None = None
         self.last_executor = None  # StreamExecutor of the last streaming epoch
         self.last_prefetch_stats = None
+        self.last_worker_stats = None  # WorkerPoolStats of the last worker epoch
         # Row-capacity grid floor stays well below the token budget so
         # near-empty tail groups don't inflate to a full window; the ceiling
         # must admit the longest realizable sample (one row always fits one
@@ -202,6 +213,9 @@ class OnlineDynamicLoader:
         prefetch: bool = False,
         prefetch_depth: int = 2,
         device_put: bool = False,
+        num_workers: int = 0,
+        worker_slots: int | None = None,
+        worker_slot_bytes: int | None = None,
         resume_from: "StreamCheckpoint | None" = None,
         finalize_audit: bool = True,
     ) -> Iterator[LoaderStep]:
@@ -224,6 +238,14 @@ class OnlineDynamicLoader:
         tail is rolled back into the executor on close — and checkpoint
         afterwards.  A checkpoint taken while the producer is live is still
         a *consistent* step boundary, but of the producer-side frontier.
+
+        With ``num_workers > 0`` (DESIGN.md §14) the layout realization —
+        packing plans, bucket padding, token synthesis — runs in a pool of
+        spawn-based worker processes with results returned through
+        shared-memory ring slots; protocol rounds stay in-parent (task
+        emission via ``executor.next_task()``), so the delivered step stream
+        is bit-identical to ``num_workers=0`` and checkpoints are
+        worker-count-agnostic (the pool holds no checkpointable state).
 
         The epoch audit is published to ``last_audit`` when iteration
         completes.
@@ -260,6 +282,18 @@ class OnlineDynamicLoader:
             )
         self.last_executor = executor
 
+        pool = None
+        if num_workers and num_workers > 0:
+            from repro.stream.workers import DEFAULT_SLOT_BYTES, WorkerPool
+
+            pool = WorkerPool(
+                self.layout,
+                num_workers,
+                slots=worker_slots,
+                slot_bytes=worker_slot_bytes or DEFAULT_SLOT_BYTES,
+            )
+            self.last_worker_stats = pool.stats
+
         staged: collections.deque[list] = collections.deque()
 
         def produce(track: bool = False) -> Iterator[LoaderStep]:
@@ -272,12 +306,55 @@ class OnlineDynamicLoader:
                     staged.append(step)
                 yield built
 
+        def produce_pool(track: bool = False) -> Iterator[LoaderStep]:
+            # Pump loop: keep the pool's task queue fed (one free shm slot
+            # per submission = the backpressure bound), then deliver the
+            # next in-order result.  Steps are staged at *submission* so an
+            # abandoned epoch can roll every unconsumed step back into the
+            # executor — submission order equals delivery order (seq-ordered
+            # reorder buffer), so the staged deque's tail is exactly the
+            # undelivered suffix.
+            del track  # the pool path always tracks (it always runs ahead)
+            done = False
+            while True:
+                while not done and pool.can_submit():
+                    task = executor.next_task()
+                    if task is None:
+                        done = True
+                        break
+                    pool.submit(*task)
+                    staged.append(task[1])
+                if done and not pool.inflight:
+                    return
+                res = pool.take()
+                if res is None:
+                    continue
+                yield LoaderStep(
+                    batches=res.batches,
+                    metadata=step_metadata(res.index, res.step),
+                    release=res.release,
+                )
+
+        def stage_release(built: LoaderStep) -> LoaderStep:
+            # Worker path + device_put: once global_batch_arrays has copied
+            # the host views into the assembled step arrays, the shm slot
+            # can recycle immediately — no need to hold it to the consumer
+            # boundary (batches keep only shapes/metadata after this).
+            built = self._stage_device(built)
+            built.release_slot()
+            return built
+
+        source = produce_pool if pool is not None else produce
+
         try:
             if prefetch:
+                stage = None
+                if device_put:
+                    stage = self._stage_device if pool is None else stage_release
                 it = PrefetchIterator(
-                    produce(track=True),
+                    source(track=True),
                     depth=prefetch_depth,
-                    stage=self._stage_device if device_put else None,
+                    stage=stage,
                 )
                 self.last_prefetch_stats = it.stats
                 try:
@@ -287,11 +364,14 @@ class OnlineDynamicLoader:
                             built.metadata, device_tokens=built.device_tokens
                         )
                         yield built
+                        built.release_slot()  # consumer boundary: recycle shm
                 finally:
                     # Blocks until the producer's in-flight step finishes
                     # (bounded by the protocol termination envelope) — the
                     # rollback below is only sound with the producer stopped.
                     it.close()
+                    if pool is not None:
+                        pool.close()
                     # Rewind the executor to the consumer's frontier: the
                     # producer ran ahead, and the staged-but-unconsumed tail
                     # would otherwise be counted delivered yet never trained
@@ -300,14 +380,27 @@ class OnlineDynamicLoader:
                         executor.requeue(list(staged))
                         staged.clear()
             else:
-                for built in produce():
-                    if device_put:
-                        built = self._stage_device(built)
-                    self.accounting.update(
-                        built.metadata, device_tokens=built.device_tokens
-                    )
-                    yield built
+                track = pool is not None
+                try:
+                    for built in source(track=track):
+                        if track:
+                            staged.popleft()
+                        if device_put:
+                            built = self._stage_device(built)
+                        self.accounting.update(
+                            built.metadata, device_tokens=built.device_tokens
+                        )
+                        yield built
+                        built.release_slot()
+                finally:
+                    if pool is not None:
+                        pool.close()
+                    if staged:
+                        executor.requeue(list(staged))
+                        staged.clear()
         finally:
+            if pool is not None:
+                pool.close()
             # Epoch-level audit contract (Theorem 1): even when the consumer
             # stops early (max_steps), finish the remaining *data-side*
             # schedule — grouping/alignment only, no padding, no compute — so

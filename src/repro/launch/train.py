@@ -104,6 +104,12 @@ def main() -> None:
              "under the jitted step",
     )
     ap.add_argument(
+        "--num-workers", type=int, default=0,
+        help="spawned realization worker processes staging steps through a "
+             "shared-memory ring (DESIGN.md §14); 0 = in-process path. The "
+             "delivered step stream is bit-identical either way",
+    )
+    ap.add_argument(
         "--telemetry", default=None, metavar="DIR",
         help="enable the obs subsystem and write metrics.json / trace.json / "
              "rounds.json into DIR at exit (DESIGN.md §13)",
@@ -151,7 +157,7 @@ def main() -> None:
             log_every=5, max_steps=args.steps,
             streaming=not args.eager, prefetch=not args.no_prefetch,
             prefetch_depth=args.prefetch_depth, lookahead=args.lookahead,
-            device_put=args.device_put,
+            device_put=args.device_put, num_workers=args.num_workers,
         ),
     )
 
@@ -181,6 +187,13 @@ def main() -> None:
     if loader.last_prefetch_stats is not None:
         st = loader.last_prefetch_stats
         print(f"prefetch hit_rate={st.hit_rate:.2f} waits={st.wait_s:.3f}s")
+    if loader.last_worker_stats is not None:
+        ws = loader.last_worker_stats
+        print(
+            f"workers completed={ws.completed} shm={ws.shm_results} "
+            f"inline={ws.inline_results} reexec={ws.reexecuted} "
+            f"failures={ws.worker_failures} wait={ws.wait_s:.3f}s"
+        )
     if reporter is not None:
         executor = loader.last_executor
         paths = reporter.write(

@@ -24,8 +24,11 @@ from __future__ import annotations
 
 from repro.obs.metrics import (
     DEFAULT_BUCKETS,
+    DEFAULT_MAX_LABEL_CHILDREN,
+    DROPPED_SERIES,
     NULL,
     Counter,
+    CrossProcessAggregator,
     Gauge,
     Histogram,
     MetricsRegistry,
@@ -42,10 +45,13 @@ from repro.obs.trace import NULL_SPAN, Span, SpanTracer, default_tracer
 
 __all__ = [
     "DEFAULT_BUCKETS",
+    "DEFAULT_MAX_LABEL_CHILDREN",
+    "DROPPED_SERIES",
     "NULL",
     "NULL_SPAN",
     "ROUND_DURATION_BUCKETS",
     "Counter",
+    "CrossProcessAggregator",
     "Gauge",
     "Histogram",
     "MetricsRegistry",

@@ -22,7 +22,16 @@ library):
     snapshotting take the registry lock;
   * **checkpoint-serializable** — ``state()``/``load_state()`` round-trip
     every instrument through plain JSON types, so stream checkpoints carry
-    continuous counters across preemption (stream/state.py).
+    continuous counters across preemption (stream/state.py);
+  * **bounded cardinality** — labeled families cap their child count
+    (``max_label_children``); past the cap, new label sets get the NULL sink
+    and ``obs_dropped_series_total`` counts the drop, so an accidental
+    per-request label in serving cannot grow registry memory without bound;
+  * **cross-process mergeable** — :class:`CrossProcessAggregator` folds
+    ``state()`` dumps shipped by other processes (prefetch workers,
+    multi-host windows) into this registry: counters and histograms merge by
+    *delta* against the last dump from the same source (so periodic
+    re-shipping never double-counts), gauges are last-write-by-timestamp.
 
 Metric names follow the Prometheus convention (``snake_case``, ``_total``
 suffix on counters, base units in the name); the stable catalog lives in
@@ -37,12 +46,22 @@ import threading
 __all__ = [
     "NULL",
     "Counter",
+    "CrossProcessAggregator",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
     "NullMetric",
     "default_registry",
 ]
+
+#: Family name of the cardinality-budget drop counter (itself unlabeled, so
+#: it can never be the victim of the cap it enforces).
+DROPPED_SERIES = "obs_dropped_series_total"
+
+#: Default per-family labeled-child budget.  Generous for every legitimate
+#: label in the catalog (layout names, worker ids, shape cells) while
+#: bounding the damage of an accidental per-request label.
+DEFAULT_MAX_LABEL_CHILDREN = 256
 
 # Generic latency buckets (seconds) — callers with tighter distributions
 # (protocol rounds, TTFT) pass their own explicit grids.
@@ -221,8 +240,15 @@ def _label_suffix(key: tuple[tuple[str, str], ...]) -> str:
 class MetricsRegistry:
     """Named metric families; snapshot-to-dict + Prometheus exposition."""
 
-    def __init__(self, enabled: bool = True) -> None:
+    def __init__(
+        self,
+        enabled: bool = True,
+        max_label_children: int | None = DEFAULT_MAX_LABEL_CHILDREN,
+    ) -> None:
         self.enabled = enabled
+        # Cardinality budget (DESIGN.md §13): per-family cap on *labeled*
+        # children; None = unbounded.  The unlabeled child is always allowed.
+        self.max_label_children = max_label_children
         self._families: dict[str, MetricFamily] = {}
         self._lock = threading.Lock()
 
@@ -249,7 +275,26 @@ class MetricsRegistry:
                     f"metric {name!r} already registered as {family.kind}, "
                     f"requested {kind}"
                 )
-            return family.child(_label_key(labels))
+            key = _label_key(labels)
+            if (
+                key
+                and self.max_label_children is not None
+                and key not in family.children
+                and sum(1 for k in family.children if k) >= self.max_label_children
+            ):
+                # Over budget: this label set never materializes.  Count the
+                # drop on the (unlabeled, hence uncappable) drop counter.
+                dropped = self._families.get(DROPPED_SERIES)
+                if dropped is None:
+                    dropped = MetricFamily(
+                        DROPPED_SERIES, "counter",
+                        "label sets refused by the per-family cardinality cap",
+                        "", None,
+                    )
+                    self._families[DROPPED_SERIES] = dropped
+                dropped.child(()).inc()
+                return NULL
+            return family.child(key)
 
     def counter(self, name: str, help: str = "", unit: str = "", **labels):
         return self._get(name, "counter", help, unit, None, labels)
@@ -382,6 +427,106 @@ class MetricsRegistry:
         """Drop every family (test isolation)."""
         with self._lock:
             self._families.clear()
+
+
+class CrossProcessAggregator:
+    """Merge ``MetricsRegistry.state()`` dumps from other processes.
+
+    Each producing process (a prefetch worker, a remote host's window) ships
+    its *cumulative* registry state periodically, tagged with a source id and
+    a wall-clock timestamp.  Merging is idempotent per dump and safe under
+    re-shipping:
+
+      * **counters** — the parent counter is incremented by the delta against
+        the previous dump from the same source; a value below the previous
+        one means the source restarted, so the full new value is the delta;
+      * **gauges** — last-write-by-timestamp across all sources (a stale
+        worker dump never overwrites a fresher one);
+      * **histograms** — per-bin count deltas (plus sum/count deltas) are
+        added onto the parent histogram with matching buckets.
+
+    Families whose kinds collide with an existing parent family are skipped
+    rather than raising: a misbehaving worker must not take down the trainer.
+    """
+
+    def __init__(self, registry: "MetricsRegistry | None" = None) -> None:
+        self.registry = registry
+        self._counter_last: dict[tuple, float] = {}
+        self._hist_last: dict[tuple, dict] = {}
+        self._gauge_ts: dict[tuple, float] = {}
+
+    def _target(self) -> "MetricsRegistry":
+        return self.registry or default_registry()
+
+    def merge(self, source: str, state: dict, timestamp: float) -> None:
+        registry = self._target()
+        if not registry.enabled or not state:
+            return
+        for name, fam_state in state.items():
+            kind = fam_state.get("type")
+            if kind not in _KINDS:
+                continue
+            buckets = fam_state.get("buckets")
+            for key_lists, sample in fam_state.get("children", []):
+                labels = {k: v for k, v in key_lists}
+                try:
+                    self._merge_child(
+                        registry, source, name, kind, buckets, labels,
+                        sample, timestamp,
+                        help=fam_state.get("help", ""),
+                        unit=fam_state.get("unit", ""),
+                    )
+                except ValueError:
+                    # Kind collision with a parent family: skip, don't raise.
+                    continue
+
+    def _merge_child(
+        self, registry, source, name, kind, buckets, labels, sample,
+        timestamp, *, help, unit,
+    ) -> None:
+        ident = (name, tuple(sorted(labels.items())))
+        if kind == "counter":
+            metric = registry.counter(name, help=help, unit=unit, **labels)
+            last = self._counter_last.get((source, *ident), 0.0)
+            value = float(sample["value"])
+            delta = value - last if value >= last else value  # restart
+            if delta > 0:
+                metric.inc(delta)
+            self._counter_last[(source, *ident)] = value
+        elif kind == "gauge":
+            if timestamp >= self._gauge_ts.get(ident, float("-inf")):
+                registry.gauge(name, help=help, unit=unit, **labels).set(
+                    sample["value"]
+                )
+                self._gauge_ts[ident] = timestamp
+        else:  # histogram
+            metric = registry.histogram(
+                name, buckets=tuple(buckets or DEFAULT_BUCKETS),
+                help=help, unit=unit, **labels,
+            )
+            if isinstance(metric, NullMetric):
+                return
+            last = self._hist_last.get(
+                (source, *ident), {"count": 0, "sum": 0.0, "buckets": {}}
+            )
+            if sample["count"] < last["count"]:  # source restarted
+                last = {"count": 0, "sum": 0.0, "buckets": {}}
+            # Invert both cumulative forms to per-bin counts, add the deltas.
+            previous_new = previous_old = 0
+            for i, bound in enumerate(metric.bounds):
+                le = format_float(bound)
+                running_new = int(sample["buckets"].get(le, previous_new))
+                running_old = int(last["buckets"].get(le, previous_old))
+                metric.counts[i] += (running_new - previous_new) - (
+                    running_old - previous_old
+                )
+                previous_new, previous_old = running_new, running_old
+            metric.counts[-1] += (sample["count"] - previous_new) - (
+                last["count"] - previous_old
+            )
+            metric.sum += sample["sum"] - last["sum"]
+            metric.count += sample["count"] - last["count"]
+            self._hist_last[(source, *ident)] = sample
 
 
 _DEFAULT = MetricsRegistry(enabled=True)

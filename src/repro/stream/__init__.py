@@ -1,10 +1,12 @@
 """Streaming DGAP execution: bounded-lookahead admission, incremental
-scheduling, async prefetch, and resumable loader state (DESIGN.md §9)."""
+scheduling, async prefetch, multi-process realization workers, and resumable
+loader state (DESIGN.md §9, §14)."""
 
 from repro.stream.executor import StreamExecutor
 from repro.stream.prefetch import PrefetchIterator, PrefetchStats
 from repro.stream.state import StreamCheckpoint
 from repro.stream.window import AdmissionWindow, BoundedWindow, WindowStats
+from repro.stream.workers import WorkerPool, WorkerPoolStats, WorkerResult
 
 __all__ = [
     "AdmissionWindow",
@@ -14,4 +16,7 @@ __all__ = [
     "StreamCheckpoint",
     "StreamExecutor",
     "WindowStats",
+    "WorkerPool",
+    "WorkerPoolStats",
+    "WorkerResult",
 ]

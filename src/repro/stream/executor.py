@@ -181,6 +181,24 @@ class StreamExecutor:
                 return
             yield s
 
+    def next_task(self) -> tuple[int, list[Group | None]] | None:
+        """One ``(step_index, aligned_step)`` realization task, or None.
+
+        The worker-pool pump (DESIGN.md §14) drives protocol rounds through
+        this: task *emission* happens here, under the executor lock, while
+        task *execution* (layout planning + padding + token synthesis) runs
+        in worker processes — the protocol never waits on realization.  The
+        pool itself holds no checkpointable state: tasks submitted but not
+        consumed are rolled back via :meth:`requeue`, so a checkpoint is
+        worker-count-agnostic and resume with any ``num_workers`` (including
+        0) continues the identical step sequence.
+        """
+        with self._lock:
+            step = self.step()
+            if step is None:
+                return None
+            return self.runner.steps_delivered - 1, step
+
     @property
     def done(self) -> bool:
         return self.runner.done

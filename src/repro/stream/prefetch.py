@@ -14,11 +14,14 @@ compute-bound steps, the hit rate should approach 1.0 (benchmarks/streaming.py
 records it).
 
 Threading notes: producer exceptions are captured and re-raised in the
-consumer thread at the position they occurred; ``close()`` stops the producer
-promptly even when it is blocked on a full queue.  The GIL makes the
+consumer thread at the position they occurred; ``close()`` signals a
+condition the producer waits on, so a producer blocked on a full queue wakes
+*immediately* (no put-poll, no timing-dependent spin) and ``close()`` returns
+as soon as the producer's current item finishes.  The GIL makes the
 protocol/bookkeeping overlap cooperative rather than parallel on pure-Python
-stages, but pipeline realization + numpy padding release the GIL enough for
-real overlap; multi-process workers are the roadmap follow-on.
+stages; ``stream/workers.py`` moves the heavy stages into worker processes
+(DESIGN.md §14) and this iterator then carries already-realized steps, with
+its ``stage`` hook as the consumer-side ``device_put`` point.
 """
 
 from __future__ import annotations
@@ -34,6 +37,58 @@ from repro import obs
 T = TypeVar("T")
 
 _END = object()
+
+
+class _ClosableQueue:
+    """Bounded FIFO whose blocked producers/consumers wake on ``close()``.
+
+    ``queue.Queue`` offers no close signal: a producer blocked in ``put`` on
+    a full queue can only poll with a timeout (the old 0.05 s spin).  Here
+    both sides wait on one condition; ``close()`` flips the flag under the
+    lock and notifies everyone, so shutdown latency is lock-handoff time,
+    not a poll interval.
+    """
+
+    def __init__(self, maxsize: int) -> None:
+        self._maxsize = maxsize
+        self._items: list = []
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self.closed = False
+
+    def put(self, item) -> bool:
+        """Block until space or close; False = queue closed, item dropped."""
+        with self._cond:
+            while len(self._items) >= self._maxsize and not self.closed:
+                self._cond.wait()
+            if self.closed:
+                return False
+            self._items.append(item)
+            self._cond.notify_all()
+            return True
+
+    def get(self, timeout: float | None = None):
+        """Pop the head; raises ``queue.Empty`` on timeout (or when closed
+        with nothing buffered).  ``timeout=0`` = non-blocking."""
+        with self._cond:
+            if not self._items and timeout != 0 and not self.closed:
+                self._cond.wait_for(lambda: self._items or self.closed, timeout)
+            if not self._items:
+                raise queue.Empty
+            item = self._items.pop(0)
+            self._cond.notify_all()
+            return item
+
+    def qsize(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def close(self) -> None:
+        """Discard buffered items and wake every waiter immediately."""
+        with self._cond:
+            self.closed = True
+            self._items.clear()
+            self._cond.notify_all()
 
 
 @dataclasses.dataclass
@@ -90,7 +145,7 @@ class PrefetchIterator(Generic[T]):
         self._m_depth = obs.gauge(
             "odb_prefetch_queue_depth", help="staged items at last delivery"
         )
-        self._queue: queue.Queue = queue.Queue(maxsize=depth)
+        self._queue = _ClosableQueue(depth)
         self._stop = threading.Event()
         self._finished = False  # _END consumed, error raised, or closed
         self._error: BaseException | None = None
@@ -100,16 +155,6 @@ class PrefetchIterator(Generic[T]):
         self._thread.start()
 
     # -- producer side ---------------------------------------------------------
-    def _put(self, item) -> bool:
-        """Blocking put that still honours close(); False = stopped."""
-        while not self._stop.is_set():
-            try:
-                self._queue.put(item, timeout=0.05)
-                return True
-            except queue.Full:
-                continue
-        return False
-
     def _produce(self, it: Iterator[T]) -> None:
         try:
             tracer = obs.default_tracer()
@@ -127,12 +172,14 @@ class PrefetchIterator(Generic[T]):
                     "prefetch/produce", t0, dt, cat="prefetch",
                     item=self.stats.produced,
                 )
-                if not self._put(item):
+                # Blocks on a full queue; a close() wakes it immediately
+                # (Event-signaled, not put-polled) and returns False.
+                if not self._queue.put(item):
                     return
                 self.stats.produced += 1
         except BaseException as exc:  # surfaced on the consumer side
             self._error = exc
-        self._put(_END)
+        self._queue.put(_END)
 
     # -- consumer side ---------------------------------------------------------
     def __iter__(self) -> Iterator[T]:
@@ -142,7 +189,7 @@ class PrefetchIterator(Generic[T]):
         if self._finished:
             raise StopIteration
         try:
-            item = self._queue.get_nowait()
+            item = self._queue.get(timeout=0)
             hit = True
         except queue.Empty:
             hit = False
@@ -191,11 +238,7 @@ class PrefetchIterator(Generic[T]):
         afterwards.
         """
         self._stop.set()
-        try:
-            while True:
-                self._queue.get_nowait()
-        except queue.Empty:
-            pass
+        self._queue.close()  # wakes a producer blocked on a full queue NOW
         self._thread.join(timeout=timeout)
         self._finished = True
 

@@ -177,6 +177,10 @@ class TrainerConfig:
     # Stage jax.device_put on the prefetch producer so H2D transfer hides
     # under the jitted step (ROADMAP "device-put overlap").
     device_put: bool = False
+    # Multi-process realization workers (DESIGN.md §14): 0 keeps layout
+    # realization in-process; > 0 spawns that many worker processes staging
+    # steps through a shared-memory ring (bit-identical step stream).
+    num_workers: int = 0
 
 
 class Trainer:
@@ -235,6 +239,7 @@ class Trainer:
                 prefetch=self.cfg.prefetch,
                 prefetch_depth=self.cfg.prefetch_depth,
                 device_put=self.cfg.device_put,
+                num_workers=self.cfg.num_workers,
             )
         return self.loader.epoch(epoch, device_put=self.cfg.device_put)
 

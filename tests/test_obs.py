@@ -27,8 +27,10 @@ from repro.core.protocol import RoundRecord
 from repro.data.datasets import _records_from_lengths
 from repro.data.pipeline import PipelinePolicy
 from repro.obs import (
+    DROPPED_SERIES,
     NULL,
     NULL_SPAN,
+    CrossProcessAggregator,
     MetricsRegistry,
     RoundTimeline,
     RunReporter,
@@ -343,3 +345,125 @@ class TestModuleConveniences:
             obs.instant("conv/mark")
         names = {e["name"] for e in obs.default_tracer().events()}
         assert {"conv/span", "conv/mark"} <= names
+
+
+class TestCardinalityBudget:
+    def test_cap_drops_new_label_sets(self):
+        reg = MetricsRegistry(max_label_children=2)
+        a = reg.counter("odb_x_total", shard="a")
+        b = reg.counter("odb_x_total", shard="b")
+        dropped = reg.counter("odb_x_total", shard="c")
+        assert dropped is NULL  # refused, not created
+        dropped.inc()  # and safe to use as a sink
+        a.inc()
+        b.inc(2)
+        flat = reg.flat()
+        assert flat['odb_x_total{shard="a"}'] == 1.0
+        assert flat['odb_x_total{shard="b"}'] == 2.0
+        assert flat[DROPPED_SERIES] == 1.0
+        assert not any("c" in k for k in flat if k.startswith("odb_x_total"))
+
+    def test_existing_children_survive_past_cap(self):
+        reg = MetricsRegistry(max_label_children=1)
+        first = reg.counter("odb_y_total", layout="dense")
+        assert reg.counter("odb_y_total", layout="packed") is NULL
+        # The pre-cap child keeps resolving to the same live instrument.
+        again = reg.counter("odb_y_total", layout="dense")
+        assert again is first
+
+    def test_unlabeled_series_not_budgeted(self):
+        reg = MetricsRegistry(max_label_children=1)
+        for name in ("a_total", "b_total", "c_total"):
+            assert reg.counter(name) is not NULL
+        assert DROPPED_SERIES not in reg.flat()
+
+    def test_cap_applies_per_family(self):
+        reg = MetricsRegistry(max_label_children=1)
+        assert reg.counter("one_total", k="x") is not NULL
+        assert reg.counter("two_total", k="y") is not NULL  # separate family
+        assert reg.counter("one_total", k="z") is NULL
+        assert reg.flat()[DROPPED_SERIES] == 1.0
+
+    def test_cap_disabled_with_none(self):
+        reg = MetricsRegistry(max_label_children=None)
+        for i in range(512):
+            assert reg.counter("odb_free_total", i=str(i)) is not NULL
+
+
+class TestCrossProcessAggregator:
+    def test_counter_deltas_sum_across_dumps(self):
+        parent = MetricsRegistry()
+        child = MetricsRegistry()
+        agg = CrossProcessAggregator(parent)
+        child.counter("odb_w_total", layout="dense").inc(3)
+        agg.merge("w0", child.state(), timestamp=1.0)
+        child.counter("odb_w_total", layout="dense").inc(2)
+        agg.merge("w0", child.state(), timestamp=2.0)  # cumulative re-ship
+        assert parent.flat()['odb_w_total{layout="dense"}'] == 5.0
+
+    def test_counter_reship_is_idempotent(self):
+        parent, child = MetricsRegistry(), MetricsRegistry()
+        agg = CrossProcessAggregator(parent)
+        child.counter("odb_w_total").inc(4)
+        state = child.state()
+        agg.merge("w0", state, timestamp=1.0)
+        agg.merge("w0", state, timestamp=2.0)  # same dump twice: no double count
+        assert parent.flat()["odb_w_total"] == 4.0
+
+    def test_counter_restart_detected(self):
+        parent, child = MetricsRegistry(), MetricsRegistry()
+        agg = CrossProcessAggregator(parent)
+        child.counter("odb_w_total").inc(10)
+        agg.merge("w0", child.state(), timestamp=1.0)
+        fresh = MetricsRegistry()  # the worker restarted: counters reset
+        fresh.counter("odb_w_total").inc(2)
+        agg.merge("w0", fresh.state(), timestamp=2.0)
+        assert parent.flat()["odb_w_total"] == 12.0
+
+    def test_counters_sum_across_sources(self):
+        parent = MetricsRegistry()
+        agg = CrossProcessAggregator(parent)
+        for source in ("w0", "w1"):
+            child = MetricsRegistry()
+            child.counter("odb_w_total").inc(3)
+            agg.merge(source, child.state(), timestamp=1.0)
+        assert parent.flat()["odb_w_total"] == 6.0
+
+    def test_gauge_last_write_by_timestamp_wins(self):
+        parent = MetricsRegistry()
+        agg = CrossProcessAggregator(parent)
+        early, late = MetricsRegistry(), MetricsRegistry()
+        early.gauge("odb_depth").set(1)
+        late.gauge("odb_depth").set(9)
+        agg.merge("w1", late.state(), timestamp=5.0)
+        agg.merge("w0", early.state(), timestamp=3.0)  # stale: must not clobber
+        assert parent.flat()["odb_depth"] == 9.0
+
+    def test_histogram_bins_merge_by_delta(self):
+        parent, child = MetricsRegistry(), MetricsRegistry()
+        agg = CrossProcessAggregator(parent)
+        h = child.histogram("odb_h", buckets=(1.0, 10.0))
+        h.observe(0.5)
+        agg.merge("w0", child.state(), timestamp=1.0)
+        h.observe(5.0)
+        agg.merge("w0", child.state(), timestamp=2.0)
+        merged = parent.histogram("odb_h", buckets=(1.0, 10.0))
+        assert merged.count == 2
+        assert merged.sum == pytest.approx(5.5)
+        assert merged.counts[0] == 1 and merged.counts[1] == 1
+
+    def test_kind_collision_skipped_not_raised(self):
+        parent, child = MetricsRegistry(), MetricsRegistry()
+        parent.gauge("odb_clash").set(7)
+        child.counter("odb_clash").inc(3)
+        agg = CrossProcessAggregator(parent)
+        agg.merge("w0", child.state(), timestamp=1.0)  # must not raise
+        assert parent.flat()["odb_clash"] == 7.0
+
+    def test_disabled_parent_is_noop(self):
+        parent, child = MetricsRegistry(), MetricsRegistry()
+        parent.disable()
+        child.counter("odb_w_total").inc(3)
+        CrossProcessAggregator(parent).merge("w0", child.state(), 1.0)
+        parent.enable()
+        assert "odb_w_total" not in parent.flat()

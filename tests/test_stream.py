@@ -255,6 +255,27 @@ class TestPrefetch:
         it.close()
         assert not it.producer_alive
 
+    def test_close_wakes_blocked_producer_immediately(self):
+        """Shutdown latency is condition-handoff time, not a poll interval:
+        a producer parked on a full queue must exit well inside the old
+        0.05 s put-poll period."""
+        parked = threading.Event()
+
+        def gen():
+            yield 0
+            parked.set()  # next put blocks: queue (depth=1) is full
+            while True:
+                yield 1
+
+        it = PrefetchIterator(gen(), depth=1)
+        assert parked.wait(timeout=5.0)
+        time.sleep(0.02)  # let the producer actually block in put()
+        t0 = time.perf_counter()
+        it.close()
+        elapsed = time.perf_counter() - t0
+        assert not it.producer_alive
+        assert elapsed < 0.04, f"close took {elapsed:.3f}s (poll-like latency)"
+
     def test_next_after_close_raises_stopiteration(self):
         it = PrefetchIterator(iter(range(10)), depth=2)
         assert next(it) == 0

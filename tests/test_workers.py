@@ -1,0 +1,408 @@
+"""Multi-process realization workers (DESIGN.md §14).
+
+The four acceptance properties of the worker subsystem:
+
+  1. **Bit-exactness** — with ``num_workers > 0`` the delivered step stream
+     (arrays included, dense and packed) is identical to the in-process
+     path, so Theorem-1 coverage and rank-aligned SPMD shapes are
+     worker-count-agnostic;
+  2. **Resumability** — a mid-epoch checkpoint taken under workers resumes
+     into the identical remaining sequence under a *different* worker count
+     (the pool holds no checkpointable state);
+  3. **Fault tolerance** — a SIGKILLed worker never hangs the stream or
+     drops a sample: its in-flight tasks re-execute in-process, and losing
+     every worker degrades to in-process execution;
+  4. **Ring invariants** — at most ``slots`` steps are in flight (free-slot
+     backpressure), a slot recycles only when the consumer releases the
+     delivered step, and a step too large for a slot falls back to inline
+     delivery rather than failing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import OdbConfig
+from repro.data.datasets import DatasetSpec, _records_from_lengths
+from repro.data.loader import OnlineDynamicLoader
+from repro.data.pipeline import PipelinePolicy
+from repro.stream import StreamExecutor, WorkerPool
+from repro.stream.workers import _decode_step, _encode_step
+
+
+def make_records(n: int, seed: int = 0, lo: int = 16, hi: int = 900):
+    rng = random.Random(seed)
+    return _records_from_lengths([rng.randint(lo, hi) for _ in range(n)])
+
+
+def small_cfg(**kw) -> OdbConfig:
+    base = dict(l_max=1024, buffer_size=16, prefetch_factor=8, num_workers=1)
+    base.update(kw)
+    return OdbConfig(**base)
+
+
+POLICY = PipelinePolicy(cutoff_len=2048)
+
+
+def _loader(world=2, layout="dense", n=60, **cfg_kw) -> OnlineDynamicLoader:
+    records = make_records(n, 13, lo=16, hi=700)
+    spec = DatasetSpec(
+        name="worker-test",
+        size=len(records),
+        policy=POLICY,
+        make_records=lambda size, seed: records[:size],
+    )
+    return OnlineDynamicLoader(
+        spec, world, small_cfg(**cfg_kw), layout=layout, seed=3, vocab_size=512
+    )
+
+
+def _digest(steps):
+    """Bit-exact fingerprint of a delivered step stream (metadata + arrays)."""
+    out = []
+    for ls in steps:
+        cells = []
+        for b in ls.batches:
+            cells.append((
+                b.tokens.tobytes(), b.positions.tobytes(), b.segments.tobytes(),
+                b.loss_mask.tobytes(), b.lengths.tobytes(),
+                b.real_samples, b.real_tokens,
+            ))
+        out.append((ls.metadata, tuple(cells)))
+    return out
+
+
+def _consume(loader, **kw):
+    """Run a full streaming epoch and digest it (copies out of shm slots
+    before they recycle, as tobytes() does)."""
+    return _digest(loader.streaming_epoch(0, **kw))
+
+
+def _executor_tasks(loader, count=None):
+    """Pull aligned-step tasks straight off a fresh executor."""
+    ex = StreamExecutor(
+        loader.dataset.records(loader.seed), loader.policy,
+        loader.world_size, loader.config, seed=loader.seed, epoch=0,
+    )
+    tasks = []
+    while count is None or len(tasks) < count:
+        task = ex.next_task()
+        if task is None:
+            break
+        tasks.append(task)
+    return tasks
+
+
+class TestBitExactEquivalence:
+    @pytest.mark.parametrize("layout", ["dense", "packed"])
+    def test_worker_stream_identical_to_in_process(self, layout):
+        ref = _consume(_loader(layout=layout))
+        got = _consume(_loader(layout=layout), num_workers=2)
+        assert got == ref
+
+    def test_worker_stream_identical_under_prefetch(self):
+        ref = _consume(_loader())
+        got = _consume(
+            _loader(), num_workers=2, prefetch=True, prefetch_depth=3
+        )
+        assert got == ref
+
+    def test_audit_and_accounting_match(self):
+        a, b = _loader(), _loader()
+        ref = _consume(a)
+        got = _consume(b, num_workers=2)
+        assert got == ref
+        assert b.last_audit.eta_identity == a.last_audit.eta_identity == 0.0
+        assert b.accounting.steps == a.accounting.steps
+        assert b.accounting.emitted_tokens == a.accounting.emitted_tokens
+        assert b.accounting.device_tokens == a.accounting.device_tokens
+        stats = b.last_worker_stats
+        assert stats.completed == stats.submitted == len(ref)
+        assert stats.worker_failures == 0
+
+    def test_step_codec_roundtrip(self):
+        tasks = _executor_tasks(_loader(), count=3)
+        for _, step in tasks:
+            assert _decode_step(_encode_step(step)) == step
+
+
+class TestResume:
+    @pytest.mark.parametrize("head_nw,tail_nw", [(2, 0), (0, 2), (2, 3)])
+    def test_checkpoint_resume_across_worker_counts(self, head_nw, tail_nw):
+        """A checkpoint taken mid-epoch under one worker count resumes the
+        identical remaining sequence under another: worker state is never
+        part of the checkpoint, and the submitted-but-unconsumed tail rolls
+        back into the executor on close."""
+        loader = _loader()
+        it = loader.streaming_epoch(
+            0, num_workers=head_nw, finalize_audit=False
+        )
+        head = _digest(next(it) for _ in range(3))
+        it.close()  # pool torn down + staged tail requeued here
+        ck = loader.last_executor.checkpoint()
+
+        resumed = _loader()
+        tail = _consume(resumed, num_workers=tail_nw, resume_from=ck)
+        full = _consume(_loader())
+        assert head + tail == full
+        assert resumed.last_audit.eta_identity == 0.0
+
+    def test_prefetch_close_rolls_back_worker_runahead(self):
+        loader = _loader()
+        it = loader.streaming_epoch(
+            0, num_workers=2, prefetch=True, prefetch_depth=4,
+            finalize_audit=False,
+        )
+        head = _digest(next(it) for _ in range(2))
+        it.close()
+        ck = loader.last_executor.checkpoint()
+
+        tail = _consume(_loader(), resume_from=ck)
+        assert head + tail == _consume(_loader())
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowLayout:
+    """Picklable layout wrapper that holds every build open for ``delay``
+    seconds — keeps a worker's claim window open so a SIGKILL deterministically
+    lands on an in-flight task."""
+
+    inner: object
+    delay: float = 0.5
+
+    def build_step(self, step):
+        time.sleep(self.delay)
+        return self.inner.build_step(step)
+
+
+class TestFaultTolerance:
+    def test_sigkill_all_workers_mid_epoch_stream_survives(self):
+        """The hard-failure drill from DESIGN.md §14: every worker SIGKILLed
+        mid-epoch, and the epoch still completes, in order, bit-exact —
+        nothing hangs, nothing is dropped."""
+        import multiprocessing as mp
+
+        ref = _consume(_loader(layout="packed"))
+        reg = obs.default_registry()
+        reg.reset()
+        reg.enable()
+        loader = _loader(layout="packed")
+        got = []
+        with pytest.warns(RuntimeWarning):
+            for i, ls in enumerate(loader.streaming_epoch(0, num_workers=2)):
+                if i == 0:
+                    victims = [
+                        p for p in mp.active_children()
+                        if p.name.startswith("odb-worker-")
+                    ]
+                    assert len(victims) == 2
+                    for p in victims:
+                        os.kill(p.pid, signal.SIGKILL)
+                    for p in victims:
+                        p.join(timeout=10)
+                got.extend(_digest([ls]))
+        assert got == ref  # complete, ordered, bit-exact — nothing dropped
+        stats = loader.last_worker_stats
+        assert stats.worker_failures == 2
+        assert stats.reexecuted > 0
+        assert reg.counter("odb_worker_failures_total").value >= 2
+        reg.reset()
+
+    def test_sigkill_claimed_task_reexecutes_in_process(self):
+        loader = _loader()
+        tasks = _executor_tasks(loader, count=2)
+        layout = SlowLayout(loader.layout, delay=1.0)
+        with pytest.warns(RuntimeWarning, match="in-flight"):
+            with WorkerPool(layout, 2, poll_interval=0.05) as pool:
+                for index, step in tasks:
+                    pool.submit(index, step)
+                # Wait for a worker to claim seq 0, then kill it while the
+                # (slowed) build holds the claim open.
+                deadline = time.time() + 15
+                while pool._pending[0].claimed_by is None:
+                    pool._drain_results(timeout=0.05)
+                    assert time.time() < deadline, "seq 0 never claimed"
+                victim = pool._procs[pool._pending[0].claimed_by]
+                os.kill(victim.pid, signal.SIGKILL)
+                victim.join(timeout=10)
+                results = [pool.take() for _ in tasks]
+        assert [r.index for r in results] == [t[0] for t in tasks]
+        for r, (_, step) in zip(results, tasks):
+            expected = loader.layout.build_step(step)
+            for got, want in zip(r.batches, expected):
+                np.testing.assert_array_equal(got.tokens, want.tokens)
+        assert pool.stats.worker_failures >= 1
+        assert pool.stats.reexecuted >= 1
+
+    def test_lost_task_message_escalates_after_stall(self):
+        """A task queue message can vanish without a trace (a worker dies
+        between reading it and announcing the claim; here we steal it from
+        the parent side).  take() must escalate after stall_timeout and
+        re-execute in-process — never block forever on a task nobody owns."""
+        loader = _loader()
+        tasks = _executor_tasks(loader, count=2)
+        layout = SlowLayout(loader.layout, delay=1.0)
+        with pytest.warns(RuntimeWarning, match="stalled"):
+            with WorkerPool(
+                layout, 1, poll_interval=0.05, stall_timeout=2.0
+            ) as pool:
+                for index, step in tasks:
+                    pool.submit(index, step)
+                # Wait until the worker owns seq 0 (and is parked in its
+                # slowed build), then steal seq 1's message off the queue.
+                deadline = time.time() + 15
+                while pool._pending[0].claimed_by is None:
+                    pool._drain_results(timeout=0.05)
+                    assert time.time() < deadline, "seq 0 never claimed"
+                stolen = pool._task_q.get(timeout=5)
+                assert stolen[0] == "task" and stolen[1] == 1
+                results = [pool.take() for _ in tasks]
+        assert [r.index for r in results] == [t[0] for t in tasks]
+        for r, (_, step) in zip(results, tasks):
+            expected = loader.layout.build_step(step)
+            for got, want in zip(r.batches, expected):
+                np.testing.assert_array_equal(got.tokens, want.tokens)
+        assert pool.stats.reexecuted >= 1
+        assert pool.stats.worker_failures == 0  # worker is fine; message died
+
+    def test_worker_death_reexecutes_unclaimed_orphan_suspect(self):
+        """On a worker death with survivors, the oldest unclaimed task is
+        treated as a possible orphan (the dead worker may have consumed its
+        message pre-claim) and re-executed with its slot quarantined; a
+        surviving worker's late duplicate is dropped and frees the slot."""
+        loader = _loader()
+        tasks = _executor_tasks(loader, count=3)
+        layout = SlowLayout(loader.layout, delay=1.0)
+        with pytest.warns(RuntimeWarning, match="in-flight"):
+            with WorkerPool(layout, 2, poll_interval=0.05) as pool:
+                for index, step in tasks:
+                    pool.submit(index, step)
+                deadline = time.time() + 20
+                while (
+                    pool._pending[0].claimed_by is None
+                    or pool._pending[1].claimed_by is None
+                ):
+                    pool._drain_results(timeout=0.05)
+                    assert time.time() < deadline, "seq 0/1 never claimed"
+                victim = pool._procs[pool._pending[0].claimed_by]
+                os.kill(victim.pid, signal.SIGKILL)
+                victim.join(timeout=10)
+                results = [pool.take() for _ in tasks]
+        assert [r.index for r in results] == [t[0] for t in tasks]
+        for r, (_, step) in zip(results, tasks):
+            expected = loader.layout.build_step(step)
+            for got, want in zip(r.batches, expected):
+                np.testing.assert_array_equal(got.tokens, want.tokens)
+        assert pool.stats.worker_failures == 1
+        # The dead worker's claimed step re-ran, plus the orphan-suspect —
+        # unless a survivor had already claimed it by audit time.
+        assert 1 <= pool.stats.reexecuted <= 2
+
+    def test_all_workers_dead_degrades_in_process(self):
+        loader = _loader()
+        tasks = _executor_tasks(loader, count=4)
+        with pytest.warns(RuntimeWarning, match="degraded|in-flight"):
+            with WorkerPool(loader.layout, 2, poll_interval=0.05) as pool:
+                # Kill the whole pool before it can pick anything up.
+                for p in pool._procs:
+                    os.kill(p.pid, signal.SIGKILL)
+                for p in pool._procs:
+                    p.join(timeout=10)
+                for index, step in tasks:
+                    assert pool.can_submit()
+                    pool.submit(index, step)
+                results = [pool.take() for _ in tasks]
+        assert [r.index for r in results] == [t[0] for t in tasks]
+        for r, (_, step) in zip(results, tasks):
+            expected = loader.layout.build_step(step)
+            for got, want in zip(r.batches, expected):
+                np.testing.assert_array_equal(got.tokens, want.tokens)
+        assert pool.stats.worker_failures == 2
+        assert pool.stats.reexecuted == len(tasks)
+        # Degraded pool keeps accepting work (in-process) — never a hang.
+        assert pool.alive_workers == 0
+
+
+class TestRingInvariants:
+    def test_backpressure_bounded_by_slots(self):
+        loader = _loader()
+        tasks = _executor_tasks(loader, count=6)
+        with WorkerPool(loader.layout, 1, slots=2) as pool:
+            submitted = 0
+            for index, step in tasks:
+                if not pool.can_submit():
+                    break
+                pool.submit(index, step)
+                submitted += 1
+            assert submitted == 2  # free-slot gate = at most `slots` in flight
+            assert pool.inflight == 2
+            with pytest.raises(RuntimeError, match="can_submit"):
+                pool.submit(*tasks[submitted])
+
+            res = pool.take()
+            # Delivered but unreleased: the slot must NOT be reusable yet —
+            # the consumer may still be reading the zero-copy views.
+            assert not pool._free_slots
+            tokens_before = res.batches[0].tokens.copy()
+            res.release()
+            assert len(pool._free_slots) == 1
+            res.release()  # idempotent
+            assert len(pool._free_slots) == 1
+            np.testing.assert_array_equal(tokens_before, tokens_before)
+            assert pool.can_submit()
+
+    def test_slot_overflow_falls_back_inline(self):
+        loader = _loader()
+        tasks = _executor_tasks(loader, count=3)
+        reference = [loader.layout.build_step(step) for _, step in tasks]
+        # 128-byte slots: every realized step overflows -> inline delivery.
+        with WorkerPool(loader.layout, 1, slots=2, slot_bytes=128) as pool:
+            results = []
+            pending = list(tasks)
+            while pending or pool.inflight:
+                while pending and pool.can_submit():
+                    pool.submit(*pending.pop(0))
+                res = pool.take()
+                if res is not None:
+                    results.append(res)
+                    res.release()
+        assert pool.stats.inline_results == len(tasks)
+        assert pool.stats.shm_results == 0
+        for r, want in zip(results, reference):
+            for got, exp in zip(r.batches, want):
+                np.testing.assert_array_equal(got.tokens, exp.tokens)
+                np.testing.assert_array_equal(got.loss_mask, exp.loss_mask)
+
+    def test_shm_results_delivered_zero_copy(self):
+        loader = _loader()
+        tasks = _executor_tasks(loader, count=2)
+        with WorkerPool(loader.layout, 1) as pool:
+            pool.submit(*tasks[0])
+            res = pool.take()
+            assert pool.stats.shm_results == 1
+            # The delivered arrays are views over the shm ring, not copies.
+            assert not res.batches[0].tokens.flags.owndata
+            res.release()
+
+    def test_worker_obs_counters_merge_into_parent(self):
+        reg = obs.default_registry()
+        reg.reset()
+        reg.enable()
+        loader = _loader(layout="packed")
+        _consume(loader, num_workers=2)
+        # Layout realization ran only in workers; the parent still reports
+        # the layout counters via the cross-process merge (DESIGN.md §14).
+        snap = reg.snapshot()
+        layout_metrics = {
+            name for name in snap if name.startswith("odb_layout_")
+        }
+        assert layout_metrics, sorted(snap)
+        reg.reset()
