@@ -4,7 +4,7 @@
 PY ?= python
 PP := PYTHONPATH=src:.
 
-.PHONY: test test-fast bench-smoke bench lint train-smoke
+.PHONY: test test-fast bench-smoke bench lint train-smoke chaos-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -12,12 +12,16 @@ test:
 test-fast:  ## skip the slow jax end-to-end modules
 	$(PY) -m pytest -x -q --ignore=tests/test_system.py --ignore=tests/test_train.py --ignore=tests/test_models.py --ignore=tests/test_kernels.py
 
-bench-smoke:  ## streaming data path + layout + kernel + serving benchmarks (CPU)
+bench-smoke:  ## streaming data path + layout + kernel + serving + fault benchmarks (CPU)
 	$(PP) $(PY) -m benchmarks.run --streaming
 	$(PP) $(PY) -m benchmarks.run --layout
 	$(PP) $(PY) -m benchmarks.run --kernels
 	$(PP) $(PY) -m benchmarks.run --serving
+	$(PP) $(PY) -m benchmarks.run --faults
 	$(MAKE) telemetry-smoke
+
+chaos-smoke:  ## deterministic fault-injection scenarios (BENCH_faults.json rails)
+	$(PP) $(PY) -m benchmarks.run --faults
 
 telemetry-smoke:  ## telemetry-enabled train + serve smoke (metrics.json / trace.json)
 	$(PP) $(PY) -m repro.launch.train --arch qwen3_0_6b --smoke --steps 6 \

@@ -1,0 +1,88 @@
+"""Fault-injection benchmark — the chaos harness as a measured acceptance lane.
+
+Runs every scenario in :mod:`repro.chaos` (gather delay/drop, slow rank,
+poison sample, worker kill, torn checkpoint) over a small seed matrix and
+reports, per (kind, seed):
+
+  * ``wall``   — scenario wall time (the faults themselves are simulated
+    against the deadline, so this stays CPU-cheap);
+  * ``ok``     — the scenario's acceptance rail: terminated, within its
+    Theorem-4 round envelope, and bit-exact (or divergence fully accounted
+    by the (R, Q, B, E, X) audit — DESIGN.md §15.5).
+
+The artifact's ``rails`` block is the bench-smoke acceptance contract:
+``all_ok`` must be true and ``bounded_termination`` asserts no scenario
+exceeded its round bound.
+
+Artifacts: ``<out>/faults.json`` plus the top-level ``BENCH_faults.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.common import csv_line
+from repro.chaos import FAULT_KINDS, run_all
+
+
+def main(argv=None) -> list[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument(
+        "--seeds", type=int, nargs="*", default=[0, 1],
+        help="chaos plan seeds; each seed is a distinct deterministic "
+             "fault schedule",
+    )
+    ap.add_argument(
+        "--kinds", nargs="*", default=None, choices=FAULT_KINDS,
+        help="restrict to these fault kinds (default: all six)",
+    )
+    args = ap.parse_args(argv)  # None -> sys.argv (standalone CLI)
+
+    lines: list[str] = []
+    scenarios: dict[str, dict] = {}
+    for seed in args.seeds:
+        results = run_all(seed, kinds=args.kinds)
+        for kind, res in results.items():
+            scenarios[f"{kind}_s{seed}"] = res.as_dict()
+            lines.append(
+                csv_line(
+                    f"faults/{kind}_s{seed}",
+                    1e6 * res.wall_s,
+                    {
+                        "ok": int(res.ok),
+                        "rounds": res.rounds,
+                        "bound": res.bound,
+                        "bit_exact": int(res.bit_exact),
+                        "accounted": int(res.accounted),
+                    },
+                )
+            )
+
+    rails = {
+        "all_ok": all(s["ok"] for s in scenarios.values()),
+        "bounded_termination": all(
+            s["within_bound"] for s in scenarios.values()
+        ),
+        "failed": sorted(k for k, s in scenarios.items() if not s["ok"]),
+    }
+    artifact = {
+        "config": {"seeds": args.seeds, "kinds": args.kinds or list(FAULT_KINDS)},
+        "scenarios": scenarios,
+        "rails": rails,
+    }
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "faults.json").write_text(json.dumps(artifact, indent=1))
+    pathlib.Path("BENCH_faults.json").write_text(json.dumps(artifact, indent=1))
+    if not rails["all_ok"]:
+        raise RuntimeError(f"chaos rails failed: {rails['failed']}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in main():
+        print(line)

@@ -18,6 +18,9 @@ under ``artifacts/bench/``.
   serving            — continuous vs static batching on the slot-cache serve
                        engine: tokens/s, p50/p99 latency, compile-once census
                        (emits BENCH_serving.json; also `run.py --serving`)
+  faults             — deterministic chaos scenarios with bounded-termination
+                       and bit-exact/accounted recovery rails
+                       (emits BENCH_faults.json; also `run.py --faults`)
 
 Select one module by name (``run.py streaming``) or flag (``run.py
 --streaming``); no argument runs everything.
@@ -32,6 +35,7 @@ import time
 def main() -> None:
     from benchmarks import (
         ablations,
+        faults,
         join_and_scaling,
         kernels,
         layout,
@@ -52,6 +56,7 @@ def main() -> None:
         ("layout", layout),
         ("kernels", kernels),
         ("serving", serving),
+        ("faults", faults),
     ]
     only = sys.argv[1].lstrip("-") if len(sys.argv) > 1 else None
     names = [name for name, _ in modules]

@@ -1,0 +1,36 @@
+"""Deterministic chaos-injection harness (DESIGN.md §15.5).
+
+Seeded fault plans (:mod:`repro.chaos.plan`), runtime injectors
+(:mod:`repro.chaos.inject`) and end-to-end recovery scenarios with
+acceptance rails (:mod:`repro.chaos.harness`): every fault class must
+terminate within its envelope, and the recovered stream must be bit-exact
+or its divergence fully accounted by the (R, Q, B, E, X) audit.
+"""
+
+from repro.chaos.harness import (
+    SCENARIOS,
+    ScenarioResult,
+    run_all,
+    stream_digest,
+)
+from repro.chaos.inject import (
+    CollectiveInjector,
+    make_worker_killer,
+    poison_samples,
+    truncate_file,
+)
+from repro.chaos.plan import FAULT_KINDS, ChaosPlan, unit_hash
+
+__all__ = [
+    "FAULT_KINDS",
+    "SCENARIOS",
+    "ChaosPlan",
+    "CollectiveInjector",
+    "ScenarioResult",
+    "make_worker_killer",
+    "poison_samples",
+    "run_all",
+    "stream_digest",
+    "truncate_file",
+    "unit_hash",
+]

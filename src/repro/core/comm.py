@@ -19,17 +19,54 @@ structural.  Two implementations:
     ``jax.experimental.multihost_utils`` for real multi-host deployments
     (one Python process per host).  Not exercised in this CPU container but
     kept API-compatible.
+
+``ResilientCollective`` wraps either transport with the fault-tolerance
+policy of DESIGN.md §15: a per-round delivery deadline, bounded retry with
+exponential backoff + deterministic jitter, and a typed, *recoverable*
+failure (:class:`RankTimeoutError`) that is distinct from the
+unrecoverable-by-design :class:`ProtocolDesyncError`.  The wrapper memoizes
+per-rank payloads so a retried round never re-runs the protocol's
+side-effecting payload closures — only the transport attempt repeats.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
+import threading
+import time
 from typing import Any, Callable, Sequence
+
+from repro import obs
 
 
 class ProtocolDesyncError(RuntimeError):
     """A rank broke the uniform-call invariant (would deadlock on hardware)."""
+
+
+class RankTimeoutError(RuntimeError):
+    """A rank missed the per-round delivery deadline after bounded retries.
+
+    Recoverable by construction (unlike :class:`ProtocolDesyncError`, which
+    is a protocol *bug*): the failed gather never reached the audited
+    transport, so every rank still holds its pre-gather state and an
+    executor checkpoint taken afterwards resumes the identical round
+    (``StreamExecutor`` converts this into a resumable ``EpochAborted``).
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        rank: int | None = None,
+        round_index: int | None = None,
+        attempts: int = 0,
+    ) -> None:
+        super().__init__(message)
+        self.rank = rank
+        self.round_index = round_index
+        self.attempts = attempts
 
 
 @dataclasses.dataclass
@@ -126,6 +163,191 @@ class JaxProcessCollective(Collective):
         out = [gathered[i] for i in range(gathered.shape[0])]
         self.stats.record(out, secondary=(tag != "primary"))
         return out
+
+
+def _unit_jitter(*parts: object) -> float:
+    """Deterministic uniform(0,1) from arbitrary parts (no wall-clock RNG)."""
+    h = hashlib.sha1("|".join(str(p) for p in parts).encode()).digest()
+    return int.from_bytes(h[:8], "big") / float(1 << 64)
+
+
+class ResilientCollective(Collective):
+    """Deadline + bounded-retry wrapper over another collective (§15).
+
+    Policy per gather: attempt delivery; a rank that misses ``deadline_s``
+    (or whose payload a fault injector drops) fails the attempt.  Up to
+    ``max_retries`` retries follow, spaced by exponential backoff with
+    deterministic jitter (``base · 2^(attempt-1) · U[0.5, 1.5)``, capped at
+    ``backoff_cap_s``; the jitter is a pure hash of (seed, round, attempt)
+    so fault runs replay bit-exactly).  When retries are exhausted the
+    gather raises :class:`RankTimeoutError` — the caller's rank state is
+    untouched because nothing reached the inner transport.
+
+    Wrapping ``LoopbackCollective`` (engine-driven ``gather_round``): the
+    per-rank payload closures run **once**, on the first attempt; retries
+    replay the memoized payloads, so protocol side effects (candidate-group
+    collection) never double-run and the inner collective's uniform-call
+    audit still sees exactly one call per rank per logical round.  Injected
+    faults are *simulated* against the deadline — chaos runs spend no wall
+    clock on the faults themselves, only on the (configurable) backoff.
+
+    Wrapping ``JaxProcessCollective`` (rank-driven ``all_gather``): the
+    inner gather runs on a watchdog thread and the deadline bounds the
+    join, so a wedged remote rank surfaces as ``RankTimeoutError`` instead
+    of an indefinite hang (retrying assumes the transport tolerates
+    re-entry, which ``process_allgather`` over a fresh round does).
+
+    ``injector`` is the chaos hook (``repro.chaos.inject``): called as
+    ``on_gather(round_index, attempt, rank, tag)`` and returns ``None``
+    (clean), ``"drop"`` (payload lost), or a float (simulated delivery
+    latency in seconds — a fault only if it exceeds the deadline).
+    """
+
+    def __init__(
+        self,
+        inner: Collective,
+        *,
+        deadline_s: float = 1.0,
+        max_retries: int = 2,
+        backoff_base_s: float = 0.05,
+        backoff_cap_s: float = 2.0,
+        injector: Any = None,
+        sleep_fn: Callable[[float], None] = time.sleep,
+        seed: int = 0,
+    ) -> None:
+        super().__init__(inner.world_size)
+        if deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.inner = inner
+        self.deadline_s = deadline_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.injector = injector
+        self.sleep_fn = sleep_fn
+        self.seed = seed
+        self.stats = inner.stats  # one ChannelStats: the wrapper adds no rounds
+        self.retries = 0  # failed attempts that were retried
+        self.recovered = 0  # gathers that succeeded after >= 1 retry
+        self._round_counter = 0  # wrapper-local gather ordinal (primary tag)
+        self._m_retries = obs.counter(
+            "odb_fault_retries_total",
+            help="gather attempts retried after a deadline miss or drop",
+        )
+        self._m_recovered = obs.counter(
+            "odb_fault_recovered_total",
+            help="gathers that succeeded after at least one retry",
+        )
+
+    # -- retry policy ----------------------------------------------------------
+    def _backoff_delay(self, round_index: int, attempt: int) -> float:
+        base = min(
+            self.backoff_cap_s, self.backoff_base_s * (2 ** max(attempt - 1, 0))
+        )
+        jitter = 0.5 + _unit_jitter("backoff", self.seed, round_index, attempt)
+        return base * jitter
+
+    def _failed_ranks(
+        self, round_index: int, attempt: int, tag: str
+    ) -> list[tuple[int, str]]:
+        """Ranks whose delivery fails this attempt (injector-simulated)."""
+        if self.injector is None:
+            return []
+        failed: list[tuple[int, str]] = []
+        for rank in range(self.world_size):
+            fault = self.injector.on_gather(round_index, attempt, rank, tag)
+            if fault is None:
+                continue
+            if fault == "drop":
+                failed.append((rank, "payload dropped"))
+            else:
+                delay = float(fault)
+                if delay > self.deadline_s:
+                    failed.append(
+                        (rank, f"delivery {delay:.3f}s > deadline {self.deadline_s:.3f}s")
+                    )
+        return failed
+
+    def _retry_loop(self, round_index: int, tag: str, attempt_fn):
+        """Run ``attempt_fn(attempt) -> (ok, failures)`` under the policy."""
+        attempt = 0
+        failures: list[tuple[int, str]] = []
+        while True:
+            ok, failures = attempt_fn(attempt)
+            if ok:
+                if attempt > 0:
+                    self.recovered += 1
+                    self._m_recovered.inc()
+                return
+            self.retries += 1
+            self._m_retries.inc()
+            attempt += 1
+            if attempt > self.max_retries:
+                rank, why = failures[0] if failures else (None, "timeout")
+                raise RankTimeoutError(
+                    f"round {round_index} ({tag}): rank {rank} failed delivery "
+                    f"after {attempt} attempts ({why})",
+                    rank=rank,
+                    round_index=round_index,
+                    attempts=attempt,
+                )
+            self.sleep_fn(self._backoff_delay(round_index, attempt))
+
+    # -- engine-driven path (Loopback) -------------------------------------------
+    def gather_round(
+        self, payload_fn: Callable[[int], Any], *, tag: str = "primary"
+    ) -> list[Any]:
+        round_index = self._round_counter
+        payloads: list[Any] | None = None
+
+        def attempt(n: int):
+            nonlocal payloads
+            if payloads is None:
+                # First attempt only: protocol payload closures may have side
+                # effects (candidate collection); retries reuse the memo.
+                payloads = [payload_fn(rank) for rank in range(self.world_size)]
+            return (not (failed := self._failed_ranks(round_index, n, tag)), failed)
+
+        self._retry_loop(round_index, tag, attempt)
+        if tag == "primary":
+            self._round_counter += 1
+        assert payloads is not None
+        return self.inner.gather_round(lambda r: payloads[r], tag=tag)
+
+    # -- rank-driven path (JaxProcess) --------------------------------------------
+    def all_gather(self, rank: int, payload: Any, *, tag: str = "primary") -> list[Any]:
+        round_index = self._round_counter
+        box: dict[str, Any] = {}
+
+        def attempt(n: int):
+            failed = [
+                f for f in self._failed_ranks(round_index, n, tag) if f[0] == rank
+            ]
+            if failed:
+                return False, failed
+            worker = threading.Thread(
+                target=self._inner_gather, args=(rank, payload, tag, box), daemon=True
+            )
+            worker.start()
+            worker.join(self.deadline_s)
+            if worker.is_alive():
+                return False, [(rank, f"no delivery within {self.deadline_s:.3f}s")]
+            if "err" in box:
+                raise box.pop("err")
+            return True, []
+
+        self._retry_loop(round_index, tag, attempt)
+        if tag == "primary":
+            self._round_counter += 1
+        return box["out"]
+
+    def _inner_gather(self, rank: int, payload: Any, tag: str, box: dict) -> None:
+        try:
+            box["out"] = self.inner.all_gather(rank, payload, tag=tag)
+        except BaseException as exc:  # surfaced on the calling thread
+            box["err"] = exc
 
 
 def metadata_round_bytes(world_size: int, buffer_size: int) -> int:

@@ -63,6 +63,15 @@ class OdbConfig:
     join_mode: bool = True  # default join (paper default; App. Q)
     output_capacity: int | None = None  # C_r envelope; None = unbounded
     exact_token_scaling: bool = True  # triggers the optional second gather
+    # -- fault-tolerance knobs (DESIGN.md §15) ---------------------------------
+    # Per-round collective delivery deadline; None disables the resilient
+    # wrapper (no deadline, no retries — the pre-§15 behaviour).
+    round_deadline_s: float | None = None
+    round_retries: int = 2  # bounded retries before RankTimeoutError
+    retry_backoff_s: float = 0.05  # backoff base (exponential, jittered)
+    # Epoch budget of realization failures moved to quarantine component X;
+    # 0 = strict (a poison sample raises, exactly the historical semantics).
+    max_quarantine: int = 0
 
     @property
     def depth(self) -> int:
@@ -569,10 +578,25 @@ class EpochAudit:
     eta_quota: float  # max(0, 1 - S_emit / N)          (Thm 2)
     eta_identity: float  # 1 - |∪ IDs| / N              (App. C.6)
     terminal_epoch: float  # S_emit / N
+    # Quarantine component X (DESIGN.md §15): realization failures moved out
+    # of the sampler order instead of wedging a round.  Views counts every
+    # event (an identity can re-fail across non-join iterations); identities
+    # is the coverage-relevant set size.
+    quarantined_views: int = 0
+    quarantined_identities: int = 0
 
     @property
     def padding_views(self) -> int:
         return self.sampler_views - self.dataset_identities  # P = M - N
+
+    @property
+    def coverage_accounted(self) -> bool:
+        """Theorem-1 rail under faults: every identity either emitted or
+        explicitly quarantined — no silent coverage gap."""
+        return (
+            self.emitted_identities + self.quarantined_identities
+            >= self.dataset_identities
+        )
 
 
 class EpochRunner:
@@ -628,6 +652,13 @@ class EpochRunner:
         self.iteration = 0
         self.emitted_total = 0
         self.emitted_ids: set[int] = set()
+        # Quarantine component X (§15): identities whose realization failed
+        # (fed by the admission window's on_quarantine hook) plus the event
+        # count.  In non-join mode the Theorem-2 quota shrinks by |X| — a
+        # deterministically poisoned identity can never be emitted, so the
+        # raw quota would chain iterations forever.
+        self.quarantined_ids: set[int] = set()
+        self.quarantined_views = 0
         self.rounds = 0
         # Incremental non-join stops rounds at the quota crossing (the eager
         # win); the offline engine would have kept going until a rank
@@ -655,6 +686,17 @@ class EpochRunner:
     def engine(self) -> "OdbProtocolEngine | None":
         return self._engine
 
+    # -- quarantine accounting (§15) -------------------------------------------
+    def note_quarantine(self, identity: int) -> None:
+        """Record one realization failure moved to component X."""
+        self.quarantined_ids.add(identity)
+        self.quarantined_views += 1
+
+    @property
+    def effective_quota(self) -> int:
+        """Theorem-2 quota minus quarantined identities (they cannot emit)."""
+        return max(0, self.n - len(self.quarantined_ids))
+
     # -- iteration lifecycle --------------------------------------------------
     def _open_iteration(self) -> None:
         self._engine = self.make_engine(self.iteration)
@@ -669,7 +711,7 @@ class EpochRunner:
         if self.config.join_mode:
             self.terminated_by = self.terminated_by or "join_all_finished"
             self._done = True
-        elif self.emitted_total >= self.n:
+        elif self.emitted_total >= self.effective_quota:
             self._done = True
         elif self.iteration >= self.max_logical_iterations:
             raise BoundedTerminationError(
@@ -763,7 +805,7 @@ class EpochRunner:
         for g in real:
             self.emitted_ids.update(s.identity for s in g.samples)
         self.steps_delivered += 1
-        if not self.config.join_mode and self.emitted_total >= self.n:
+        if not self.config.join_mode and self.emitted_total >= self.effective_quota:
             # Theorem 2: the final quota crossing happens inside one aligned
             # step, so S_emit - N <= S_max.  Stop delivering; abandon the
             # rest of the iteration (rounds + queued steps).
@@ -829,6 +871,8 @@ class EpochRunner:
             eta_quota=max(0.0, 1.0 - self.emitted_total / n) if n else 0.0,
             eta_identity=1.0 - len(self.emitted_ids) / n if n else 0.0,
             terminal_epoch=self.emitted_total / n if n else 0.0,
+            quarantined_views=self.quarantined_views,
+            quarantined_identities=len(self.quarantined_ids),
         )
 
 

@@ -218,6 +218,7 @@ class OnlineDynamicLoader:
         worker_slot_bytes: int | None = None,
         resume_from: "StreamCheckpoint | None" = None,
         finalize_audit: bool = True,
+        fault_injector=None,
     ) -> Iterator[LoaderStep]:
         """Online path (DESIGN.md §9): batch formation happens at the point
         where realized lengths become observable.
@@ -269,7 +270,9 @@ class OnlineDynamicLoader:
                     f"resume_from checkpoint was taken with lookahead "
                     f"{ck_lookahead}, but lookahead={lookahead} was requested"
                 )
-            executor = StreamExecutor.resume(resume_from, records, self.policy)
+            executor = StreamExecutor.resume(
+                resume_from, records, self.policy, fault_injector=fault_injector
+            )
         else:
             executor = StreamExecutor(
                 records,
@@ -279,6 +282,7 @@ class OnlineDynamicLoader:
                 seed=self.seed,
                 epoch=epoch,
                 lookahead=lookahead,
+                fault_injector=fault_injector,
             )
         self.last_executor = executor
 
@@ -409,7 +413,11 @@ class OnlineDynamicLoader:
             # that must exit promptly (preemption after a checkpoint): they
             # hold the executor (``last_executor``) and its checkpoint, and
             # ``last_audit`` then reflects only the delivered prefix.
-            if finalize_audit:
+            # An aborted epoch (EpochAborted, DESIGN.md §15.4) must not be
+            # drained — the executor latched after an unrecoverable round
+            # fault and every further step() re-raises; the caller recovers
+            # via the abort checkpoint, and last_audit reflects the prefix.
+            if finalize_audit and not executor.aborted:
                 while executor.step() is not None:
                     pass
             self.last_audit = executor.audit()

@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
+from typing import Callable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +65,31 @@ def _unit_hash(*parts: object) -> float:
     return int.from_bytes(h[:8], "big") / float(1 << 64)
 
 
+class SampleCorruptionError(RuntimeError):
+    """Online realization failed for one sample (poison input, codec error).
+
+    The admission window converts this into a quarantine entry — component
+    ``X`` of the extended No-Leak partition (R, Q, B, E, X) — when a
+    quarantine budget is configured (DESIGN.md §15); with the default
+    strict budget of 0 it propagates like any realization error.
+    """
+
+
+# Chaos injection point (repro.chaos): called at the top of run_pipeline with
+# (record, policy, epoch); raising there simulates a poison sample whose
+# corruption only manifests once the online pipeline touches it.  None = off.
+_FAULT_HOOK: "Callable[[RawRecord, PipelinePolicy, int], None] | None" = None
+
+
+def set_pipeline_fault_hook(hook) -> "Callable | None":
+    """Install (or clear, with None) the pipeline fault hook; returns the
+    previous hook so callers can restore it."""
+    global _FAULT_HOOK
+    previous = _FAULT_HOOK
+    _FAULT_HOOK = hook
+    return previous
+
+
 def run_pipeline(record: RawRecord, policy: PipelinePolicy, epoch: int = 0) -> int:
     """Realize the post-pipeline tokenized length of one sample.
 
@@ -77,6 +103,8 @@ def run_pipeline(record: RawRecord, policy: PipelinePolicy, epoch: int = 0) -> i
       5. cutoff — hard clip at ``cutoff_len`` (experiments use cutoffs above
          the realized max, so this is a guardrail, not truncation).
     """
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK(record, policy, epoch)
     aug = 1.0
     if policy.augmentation_strength > 0:
         u = _unit_hash("aug", record.identity, epoch, policy.augmentation_strength)

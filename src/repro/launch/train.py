@@ -15,12 +15,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import pathlib
 
 import jax
 
 from repro.configs import get_config, get_smoke_config
 from repro.core import BucketSpec, OdbConfig
 from repro.data import OnlineDynamicLoader, get_dataset
+from repro.stream import EpochAborted
 from repro.models import LM
 from repro.train.optimizer import OptimizerConfig
 from repro.train.trainer import Trainer, TrainerConfig
@@ -66,6 +68,23 @@ def main() -> None:
     ap.add_argument("--non-join", action="store_true")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument(
+        "--round-deadline", type=float, default=None, metavar="SECONDS",
+        help="per-round collective delivery deadline (DESIGN.md §15); a "
+             "round whose gather misses it is retried with exponential "
+             "backoff, and an exhausted retry budget aborts the epoch into "
+             "a resumable checkpoint instead of hanging. Default: off",
+    )
+    ap.add_argument(
+        "--round-retries", type=int, default=2,
+        help="gather retries before a missed --round-deadline aborts",
+    )
+    ap.add_argument(
+        "--max-quarantine", type=int, default=0,
+        help="per-epoch budget of samples whose online realization may fail "
+             "and be quarantined (accounted component X, DESIGN.md §15) "
+             "instead of crashing the epoch. Default 0 = strict",
+    )
     ap.add_argument(
         "--eager", action="store_true",
         help="offline data path (full-epoch length realization) instead of "
@@ -134,6 +153,9 @@ def main() -> None:
         l_max=args.l_max, buffer_size=args.buffer,
         prefetch_factor=args.prefetch, num_workers=4,
         join_mode=not args.non_join,
+        round_deadline_s=args.round_deadline,
+        round_retries=args.round_retries,
+        max_quarantine=args.max_quarantine,
     )
     bucket_spec = BucketSpec(min_len=128, max_len=16384, max_count=1024)
     layout = args.layout
@@ -172,6 +194,22 @@ def main() -> None:
             break
         except KeyboardInterrupt:
             raise
+        except EpochAborted as exc:  # degraded-mode closure (DESIGN.md §15.4)
+            restarts += 1
+            print(
+                f"[train] epoch aborted ({exc.cause}); "
+                f"restart {restarts}/{args.max_restarts}"
+            )
+            if args.checkpoint_dir:
+                # The abort carries a valid stream checkpoint; persist it
+                # beside the model checkpoints so an operator (or the next
+                # restart of a stream-resuming driver) can continue the
+                # identical step sequence instead of replaying the epoch.
+                abort_path = pathlib.Path(args.checkpoint_dir) / "stream_abort.json"
+                exc.checkpoint().save(str(abort_path))
+                print(f"[train] abort stream checkpoint: {abort_path}")
+            if restarts > args.max_restarts or not args.checkpoint_dir:
+                raise
         except Exception as exc:  # crash -> resume from latest checkpoint
             restarts += 1
             print(f"[train] crash ({type(exc).__name__}: {exc}); restart {restarts}")

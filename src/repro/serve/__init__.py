@@ -6,6 +6,7 @@ from repro.serve.requests import (
     FINISHED,
     QUEUED,
     RUNNING,
+    SHED,
     WAITING,
     Request,
     RequestWindow,
@@ -23,6 +24,7 @@ __all__ = [
     "RequestWindow",
     "ServeConfig",
     "ServeStats",
+    "SHED",
     "SlotManager",
     "WAITING",
     "synth_request_trace",

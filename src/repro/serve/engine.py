@@ -46,6 +46,7 @@ from repro.serve.requests import (
     EVICTED,
     FINISHED,
     RUNNING,
+    SHED,
     Request,
     RequestWindow,
 )
@@ -62,6 +63,11 @@ class ServeConfig:
     lookahead: int = 32  # realized-but-unscheduled request bound
     continuous: bool = True  # False = static batching baseline
     prefill_min_tokens: int = 64  # packed prefill stream bucket floor
+    # Engine-wide queueing TTL (DESIGN.md §15.7): a request still waiting for
+    # a slot this many seconds after submission is shed at admission time
+    # instead of scheduled into a batch whose caller already gave up.  None
+    # disables shedding; per-request Request.ttl_s overrides.
+    default_ttl_s: float | None = None
 
     def cell(self, name: str = "serve") -> ServeCell:
         return ServeCell(name, self.num_slots, self.max_len, self.l_max)
@@ -85,6 +91,7 @@ class ServeStats:
     admitted: int = 0
     finished: int = 0
     evicted: int = 0
+    shed: int = 0  # TTL-expired while waiting; never occupied a slot
     generated_tokens: int = 0
     # max Σ projected over any tick; ≤ l_max under continuous admission (the
     # static baseline packs slots-only, deliberately ignoring the budget)
@@ -157,6 +164,10 @@ class ContinuousBatchingEngine:
             "serve_finished_total", help="requests completed"
         )
         self._m_evicted = obs.counter("serve_evicted_total", help="requests evicted")
+        self._m_shed = obs.counter(
+            "odb_serve_shed_total",
+            help="requests shed at admission because their queueing TTL expired",
+        )
         self._m_occupancy = obs.gauge(
             "serve_slot_occupancy", help="active KV slots / num_slots after last tick"
         )
@@ -201,7 +212,12 @@ class ContinuousBatchingEngine:
 
     # -- request lifecycle -----------------------------------------------------
     def submit(
-        self, prompt, max_new_tokens: int, *, eos_id: int | None = None
+        self,
+        prompt,
+        max_new_tokens: int,
+        *,
+        eos_id: int | None = None,
+        ttl_s: float | None = None,
     ) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] == 0:
@@ -222,6 +238,7 @@ class ContinuousBatchingEngine:
             prompt=prompt,
             max_new_tokens=max_new_tokens,
             eos_id=eos_id,
+            ttl_s=ttl_s,
             submitted_s=self.time_fn(),
         )
         self.requests[rid] = request
@@ -248,6 +265,36 @@ class ContinuousBatchingEngine:
         self._m_finished.inc()
 
     # -- admission (tick phase 1) ----------------------------------------------
+    def _shed_expired(self) -> None:
+        """Drop waiting-pool requests whose queueing TTL has lapsed (§15.7).
+
+        Load shedding happens at the admission boundary only: a request that
+        reached RUNNING keeps its slot (mid-decode cancellation is
+        :meth:`evict`, a caller decision).  Under saturation this is what
+        keeps the queue from growing without bound — every tick either admits
+        work or retires expired work, so the engine always terminates on a
+        closed queue even when the offered load exceeds capacity.
+        """
+        if not self.waiting:
+            return
+        now = self.time_fn()
+        kept: list[Sample] = []
+        for sample in self.waiting:
+            request = sample.payload
+            ttl = (
+                request.ttl_s
+                if request.ttl_s is not None
+                else self.config.default_ttl_s
+            )
+            if ttl is not None and now - request.submitted_s > ttl:
+                request.state = SHED
+                request.finished_s = now
+                self.stats.shed += 1
+                self._m_shed.inc()
+            else:
+                kept.append(sample)
+        self.waiting = kept
+
     def _admit(self) -> list[Sample]:
         if not self.config.continuous and self.slots.active_count > 0:
             return []  # static batching: drain fully before refilling
@@ -259,6 +306,7 @@ class ContinuousBatchingEngine:
         want = 2 * self.config.num_slots - len(self.waiting)
         if want > 0:
             self.waiting.extend(self.window.take(0, want))
+        self._shed_expired()
         if not self.waiting:
             return []
         if not self.config.continuous:

@@ -54,6 +54,7 @@ WAITING = "waiting"  # realized cost, waiting for slot + budget
 RUNNING = "running"  # occupies a KV slot
 FINISHED = "finished"
 EVICTED = "evicted"  # cancelled mid-flight; slot reclaimed
+SHED = "shed"  # TTL expired while queued/waiting; never held a slot
 
 
 @dataclasses.dataclass
@@ -64,6 +65,9 @@ class Request:
     prompt: np.ndarray  # (prompt_len,) int32 token ids
     max_new_tokens: int
     eos_id: int | None = None
+    # Queueing deadline: shed (never schedule) once now - submitted_s exceeds
+    # it.  None defers to the engine-wide ServeConfig.default_ttl_s.
+    ttl_s: float | None = None
     state: str = QUEUED
     generated: list[int] = dataclasses.field(default_factory=list)
     slot: int | None = None

@@ -2,7 +2,7 @@
 scheduling, async prefetch, multi-process realization workers, and resumable
 loader state (DESIGN.md §9, §14)."""
 
-from repro.stream.executor import StreamExecutor
+from repro.stream.executor import EpochAborted, StreamExecutor
 from repro.stream.prefetch import PrefetchIterator, PrefetchStats
 from repro.stream.state import StreamCheckpoint
 from repro.stream.window import AdmissionWindow, BoundedWindow, WindowStats
@@ -11,6 +11,7 @@ from repro.stream.workers import WorkerPool, WorkerPoolStats, WorkerResult
 __all__ = [
     "AdmissionWindow",
     "BoundedWindow",
+    "EpochAborted",
     "PrefetchIterator",
     "PrefetchStats",
     "StreamCheckpoint",

@@ -20,6 +20,16 @@ serializes window cursor, residual pools and emit accounting
 (stream/state.py); ``StreamExecutor.resume`` reconstructs an executor that
 continues the identical step sequence, so mid-epoch preemption preserves
 exact-identity coverage.
+
+Fault tolerance (DESIGN.md §15): with ``config.round_deadline_s`` set (or a
+chaos injector installed) the engine's collective is wrapped in
+:class:`repro.core.comm.ResilientCollective`.  A transient gather fault is
+retried transparently; an unrecoverable one surfaces as
+:class:`EpochAborted`, which carries a *valid* resumable checkpoint — the
+failed gather left no observable protocol change (payloads are memoized in
+the wrapper and the round index never advanced), so resuming replays the
+identical round and the combined pre-abort + post-resume step stream is the
+uninterrupted one.
 """
 
 from __future__ import annotations
@@ -30,6 +40,7 @@ import threading
 from typing import Iterator
 
 from repro import obs
+from repro.core.comm import RankTimeoutError, ResilientCollective
 from repro.core.grouping import Group
 from repro.core.protocol import (
     EpochAudit,
@@ -56,6 +67,29 @@ from repro.stream.state import (
 from repro.stream.window import AdmissionWindow, WindowStats
 
 
+class EpochAborted(RuntimeError):
+    """Degraded-mode epoch closure (DESIGN.md §15.4).
+
+    Raised by :meth:`StreamExecutor.step` when a round's collective exhausts
+    its retry budget (:class:`repro.core.comm.RankTimeoutError`).  The epoch
+    is *not* lost: the failed gather left no observable protocol change, so
+    :meth:`checkpoint` (lazy — taken on first call, under the executor lock)
+    yields a valid stream checkpoint from which ``StreamExecutor.resume``
+    replays the aborted round and continues the identical step sequence.
+    """
+
+    def __init__(self, cause: BaseException, executor: "StreamExecutor") -> None:
+        super().__init__(f"epoch aborted: {cause}")
+        self.cause = cause
+        self._executor = executor
+        self._checkpoint: StreamCheckpoint | None = None
+
+    def checkpoint(self) -> StreamCheckpoint:
+        if self._checkpoint is None:
+            self._checkpoint = self._executor.checkpoint()
+        return self._checkpoint
+
+
 class StreamExecutor:
     """Step-at-a-time ODB epoch over a bounded admission window."""
 
@@ -71,6 +105,7 @@ class StreamExecutor:
         lookahead: int | None = None,
         max_logical_iterations: int = 64,
         dataset_identities: int | None = None,
+        fault_injector=None,
     ) -> None:
         n = len(records) if dataset_identities is None else dataset_identities
         self.records = records
@@ -99,6 +134,15 @@ class StreamExecutor:
                 "output_capacity is an eager-path knob; the streaming "
                 "executor's backpressure is lookahead + prefetch depth"
             )
+        # Chaos injection (repro.chaos): queried per (round, attempt, rank)
+        # by the ResilientCollective wrapper.  None in production unless a
+        # harness installs one; installing one also turns the wrapper on.
+        self.fault_injector = fault_injector
+        # Degraded-mode latch: once a round aborts, subsequent step() calls
+        # re-raise instead of re-driving rounds into the same dead transport —
+        # recovery is checkpoint + resume, not silent retry-forever.
+        self.aborted = False
+        self._abort_cause: BaseException | None = None
         self.window: AdmissionWindow | None = None
         self._closed_window_stats: list[WindowStats] = []
         # step()/checkpoint()/audit() are serialized so a checkpoint taken
@@ -132,9 +176,23 @@ class StreamExecutor:
     def _on_closure(self, event: str, iteration: int, rounds: int) -> None:
         self.telemetry.record_closure(event, iteration, rounds)
 
+    # -- fault hooks -------------------------------------------------------------
+    def _on_quarantine(self, position: int, identity: int, exc: BaseException) -> None:
+        # Fold a window-level quarantine into the epoch-level Lemma-1
+        # accounting: the identity joins component X, which shrinks the
+        # effective quota so non-join termination cannot chase a poison
+        # identity across logical iterations forever (Theorem 2 caveat, §15).
+        self.runner.note_quarantine(identity)
+
     # -- iteration factory -----------------------------------------------------
     def _make_window(self, iteration: int) -> AdmissionWindow:
-        return AdmissionWindow(
+        # The quarantine budget is per *epoch* and charges each distinct
+        # sample once: a new window gets whatever headroom earlier iterations
+        # left unspent, and identities already in X are exempt — a non-join
+        # catch-up iteration (or a resumed run) re-walks the order and meets
+        # the same deterministically-failing sample again, which must not
+        # re-spend the budget.
+        window = AdmissionWindow(
             self.records,
             self.policy,
             self.spec,
@@ -142,7 +200,13 @@ class StreamExecutor:
             pipeline_epoch=self.epoch,
             lookahead=self.lookahead,
             view_id_base=iteration * ITERATION_VIEW_ID_STRIDE,
+            max_quarantine=max(
+                0, self.config.max_quarantine - len(self.runner.quarantined_ids)
+            ),
+            quarantine_exempt=frozenset(self.runner.quarantined_ids),
         )
+        window.on_quarantine = self._on_quarantine
+        return window
 
     def _make_engine(self, iteration: int) -> OdbProtocolEngine:
         if self.window is not None:
@@ -163,13 +227,37 @@ class StreamExecutor:
             round_margin=64 + self.spec.total_views,
         )
         engine.on_round = self._on_round
+        if self.config.round_deadline_s is not None or self.fault_injector is not None:
+            engine.collective = ResilientCollective(
+                engine.collective,
+                deadline_s=(
+                    1.0
+                    if self.config.round_deadline_s is None
+                    else self.config.round_deadline_s
+                ),
+                max_retries=self.config.round_retries,
+                backoff_base_s=self.config.retry_backoff_s,
+                injector=self.fault_injector,
+                seed=self.seed,
+            )
         return engine
 
     # -- trainer-facing surface ------------------------------------------------
     def step(self) -> list[Group | None] | None:
         with self._lock:
-            with obs.span("stream/step", cat="stream"):
-                out = self.runner.step()
+            if self.aborted:
+                raise EpochAborted(self._abort_cause, self)
+            try:
+                with obs.span("stream/step", cat="stream"):
+                    out = self.runner.step()
+            except RankTimeoutError as exc:
+                # Degraded-mode closure (§15.4): latch, then surface the abort
+                # carrying a lazy checkpoint.  We are between steps here (the
+                # failed gather never mutated protocol state), so the
+                # checkpoint is valid and resume replays the aborted round.
+                self.aborted = True
+                self._abort_cause = exc
+                raise EpochAborted(exc, self) from exc
             if out is not None:
                 self._m_steps.inc()
             return out
@@ -222,6 +310,7 @@ class StreamExecutor:
             agg.realized += st.realized
             agg.delivered += st.delivered
             agg.refusals += st.refusals
+            agg.quarantined += st.quarantined
             agg.peak_resident = max(agg.peak_resident, st.peak_resident)
         return agg
 
@@ -262,6 +351,11 @@ class StreamExecutor:
                 "iteration_open": runner._iteration_open,
                 "iter_rounds": runner._iter_rounds,
                 "ready": [step_to_json(s) for s in runner._ready],
+                # Component X (v3): a small sorted list, not a bitmap — it is
+                # bounded by max_quarantine, and the base-window sentinel
+                # identity -1 would not fit a dense bitmap anyway.
+                "quarantined_ids": sorted(runner.quarantined_ids),
+                "quarantined_views": runner.quarantined_views,
             },
             "engine": None
             if engine is None
@@ -300,6 +394,8 @@ class StreamExecutor:
         checkpoint: StreamCheckpoint,
         records: list[RawRecord],
         policy: PipelinePolicy,
+        *,
+        fault_injector=None,
     ) -> "StreamExecutor":
         """Rebuild an executor that continues the checkpointed step sequence.
 
@@ -328,10 +424,13 @@ class StreamExecutor:
             lookahead=p["lookahead"],
             max_logical_iterations=p["max_logical_iterations"],
             dataset_identities=p["dataset_identities"],
+            fault_injector=fault_injector,
         )
         rs = p["runner"]
         runner = ex.runner
         runner.iteration = rs["iteration"]
+        runner.quarantined_ids = set(rs.get("quarantined_ids", []))
+        runner.quarantined_views = rs.get("quarantined_views", 0)
         runner.emitted_total = rs["emitted_total"]
         runner.emitted_ids = bitmap_to_identities(rs["emitted_bitmap"])
         runner.rounds = rs["rounds"]

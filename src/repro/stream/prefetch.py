@@ -56,10 +56,17 @@ class _ClosableQueue:
         self._cond = threading.Condition(self._lock)
         self.closed = False
 
-    def put(self, item) -> bool:
-        """Block until space or close; False = queue closed, item dropped."""
+    def put(self, item, force: bool = False) -> bool:
+        """Block until space or close; False = queue closed, item dropped.
+
+        ``force=True`` appends even when full (never blocks) — reserved for
+        the terminal sentinel: a producer that just *failed* must be able to
+        deliver ``_END`` past a full queue, or the error it captured would
+        sit unreported behind a blocked put until the consumer happened to
+        drain (tests/test_stream.py::TestPrefetch).
+        """
         with self._cond:
-            while len(self._items) >= self._maxsize and not self.closed:
+            while not force and len(self._items) >= self._maxsize and not self.closed:
                 self._cond.wait()
             if self.closed:
                 return False
@@ -179,7 +186,10 @@ class PrefetchIterator(Generic[T]):
                 self.stats.produced += 1
         except BaseException as exc:  # surfaced on the consumer side
             self._error = exc
-        self._queue.put(_END)
+        # force: the sentinel must land even on a full queue — on the error
+        # path nothing will ever drain ahead of it if the consumer is slow,
+        # and the producer thread must exit promptly either way.
+        self._queue.put(_END, force=True)
 
     # -- consumer side ---------------------------------------------------------
     def __iter__(self) -> Iterator[T]:
@@ -200,9 +210,14 @@ class PrefetchIterator(Generic[T]):
                     break
                 except queue.Empty:
                     # Producer dead with nothing queued (e.g. close() drained
-                    # the sentinel): the stream is over, don't block forever.
+                    # the sentinel): the stream is over, don't block forever —
+                    # but never swallow a captured producer error into a bare
+                    # StopIteration (the pre-fix masking bug).
                     if self._finished or not self._thread.is_alive():
                         self._finished = True
+                        if self._error is not None:
+                            error, self._error = self._error, None
+                            raise error
                         raise StopIteration from None
             waited = time.perf_counter() - t0
             self.stats.wait_s += waited

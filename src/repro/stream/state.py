@@ -33,9 +33,12 @@ from typing import Any
 from repro.core.grouping import Group, Sample
 from repro.core.protocol import IDLE, OdbConfig, RankCounters, RankRuntime
 
+# v3: quarantine component X rides the checkpoint (runner quarantined ids +
+# per-window quarantine records, DESIGN.md §15) so a resumed run keeps the
+# extended (R, Q, B, E, X) accounting; earlier versions are rejected.
 # v2: emitted ledgers shrank to count + identity bitmap (ROADMAP "checkpoint
 # size"); v1 checkpoints carried per-sample emitted lists and are rejected.
-STATE_VERSION = 2
+STATE_VERSION = 3
 
 
 # -- identity bitmap codec ----------------------------------------------------

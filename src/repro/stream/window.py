@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+from typing import Callable
 
 from repro import obs
 from repro.core.grouping import Sample
@@ -49,6 +50,7 @@ class WindowStats:
     delivered: int = 0  # total views handed to the engine
     peak_resident: int = 0  # max realized-but-undelivered at any instant
     refusals: int = 0  # take() calls throttled by the lookahead budget
+    quarantined: int = 0  # realization failures moved to component X (§15)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -70,9 +72,25 @@ class BoundedWindow(ViewSource):
     ``lookahead`` must be at least ``world_size`` — below that, a full budget
     can consist entirely of views staged for other ranks and the requesting
     rank could starve for a round with nothing forcing progress.
+
+    Sample quarantine (DESIGN.md §15): a position whose ``realize`` raises
+    is moved to the accounted component ``X`` — the cursor advances past it,
+    nothing is staged, and the failure is recorded in ``quarantined`` — up
+    to ``max_quarantine`` such failures; beyond the budget (or with the
+    strict default of 0) the exception propagates.  ``on_quarantine`` lets
+    an owner (the stream executor) fold each event into the epoch-level
+    Lemma-1 accounting, so a poison sample can neither wedge a round nor
+    silently vanish from coverage.
     """
 
-    def __init__(self, world_size: int, lookahead: int) -> None:
+    def __init__(
+        self,
+        world_size: int,
+        lookahead: int,
+        *,
+        max_quarantine: int = 0,
+        quarantine_exempt: frozenset[int] = frozenset(),
+    ) -> None:
         if lookahead < world_size:
             raise ValueError(
                 f"lookahead {lookahead} < world_size {world_size}: "
@@ -80,6 +98,19 @@ class BoundedWindow(ViewSource):
             )
         self.world_size = world_size
         self.lookahead = lookahead
+        self.max_quarantine = max_quarantine
+        # Identities already quarantined earlier in the epoch (a non-join
+        # catch-up iteration or a resumed run re-walks the order and meets
+        # the same deterministically-failing sample again): re-quarantining
+        # them is free — the budget charges each distinct sample once.
+        self.quarantine_exempt = frozenset(quarantine_exempt)
+        self._quarantine_charged = 0
+        self._charged_ids: set[int] = set()
+        # Component X of the extended No-Leak partition (R, Q, B, E, X):
+        # positions whose realization failed, with the identity + error kept
+        # so audits (and checkpoints) account for every undelivered view.
+        self.quarantined: list[dict] = []
+        self.on_quarantine: Callable[[int, int, BaseException], None] | None = None
         self.cursor = 0
         self.resident = 0
         self.staged: list[collections.deque[Sample]] = [
@@ -102,6 +133,10 @@ class BoundedWindow(ViewSource):
         self._m_resident = obs.gauge(
             "odb_window_resident", help="realized-but-undelivered views resident now"
         )
+        self._m_quarantined = obs.counter(
+            "odb_fault_quarantined_total",
+            help="views moved to the quarantine component X on realization failure",
+        )
 
     # -- order interface (subclass responsibility) -----------------------------
     def order_size(self) -> int:  # pragma: no cover
@@ -116,10 +151,44 @@ class BoundedWindow(ViewSource):
         """May positions beyond ``order_size()`` still arrive?"""
         return False
 
+    def quarantine_identity(self, position: int) -> int:
+        """Identity behind ``position`` for quarantine accounting (-1 = n/a)."""
+        return -1
+
     # -- admission -------------------------------------------------------------
     def _admit_one(self) -> None:
-        sample = self.realize(self.cursor)
-        self.staged[self.cursor % self.world_size].append(sample)
+        position = self.cursor
+        try:
+            sample = self.realize(position)
+        except Exception as exc:
+            identity = self.quarantine_identity(position)
+            exempt = identity >= 0 and (
+                identity in self.quarantine_exempt
+                or identity in self._charged_ids
+            )
+            if not exempt and self._quarantine_charged >= self.max_quarantine:
+                raise
+            if not exempt:
+                self._quarantine_charged += 1
+                if identity >= 0:
+                    self._charged_ids.add(identity)
+            # The cursor advances past the position WITHOUT staging it: the
+            # view leaves the sampler order for component X, so take() keeps
+            # making progress and no rank ever waits on the poison sample.
+            self.cursor += 1
+            self.quarantined.append(
+                {
+                    "position": position,
+                    "identity": identity,
+                    "error": f"{type(exc).__name__}: {exc}",
+                }
+            )
+            self.stats.quarantined += 1
+            self._m_quarantined.inc()
+            if self.on_quarantine is not None:
+                self.on_quarantine(position, identity, exc)
+            return
+        self.staged[position % self.world_size].append(sample)
         self.cursor += 1
         self.resident += 1
         self.stats.realized += 1
@@ -188,10 +257,17 @@ class AdmissionWindow(BoundedWindow):
         pipeline_epoch: int = 0,
         lookahead: int | None = None,
         view_id_base: int = 0,
+        max_quarantine: int = 0,
+        quarantine_exempt: frozenset[int] = frozenset(),
     ) -> None:
         if lookahead is None:
             lookahead = spec.total_views
-        super().__init__(spec.world_size, lookahead)
+        super().__init__(
+            spec.world_size,
+            lookahead,
+            max_quarantine=max_quarantine,
+            quarantine_exempt=quarantine_exempt,
+        )
         self.records = records
         self.policy = policy
         self.spec = spec
@@ -213,6 +289,9 @@ class AdmissionWindow(BoundedWindow):
             length=length,
         )
 
+    def quarantine_identity(self, position: int) -> int:
+        return self.order[position]
+
     # -- checkpointing (stream/state.py) ---------------------------------------
     def state_dict(self) -> dict:
         """Serializable mid-iteration window state.
@@ -233,12 +312,23 @@ class AdmissionWindow(BoundedWindow):
             ],
             "delivered_per_rank": list(self.delivered_per_rank),
             "stats": self.stats.as_dict(),
+            "max_quarantine": self.max_quarantine,
+            "quarantined": [dict(q) for q in self.quarantined],
         }
 
     def load_state_dict(self, state: dict) -> None:
         self.cursor = state["cursor"]
         self.view_id_base = state["view_id_base"]
         self.lookahead = state["lookahead"]
+        self.max_quarantine = state["max_quarantine"]
+        self.quarantined = [dict(q) for q in state["quarantined"]]
+        self._charged_ids = {
+            q["identity"] for q in self.quarantined
+            if q["identity"] >= 0 and q["identity"] not in self.quarantine_exempt
+        }
+        self._quarantine_charged = len(self._charged_ids) + sum(
+            1 for q in self.quarantined if q["identity"] < 0
+        )
         self.staged = [
             collections.deque(
                 Sample(view_id=v, identity=i, length=ln) for v, i, ln in dq

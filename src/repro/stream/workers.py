@@ -323,6 +323,7 @@ class WorkerPool:
         slot_bytes: int = DEFAULT_SLOT_BYTES,
         poll_interval: float = 0.2,
         stall_timeout: float = 30.0,
+        fault_hook=None,
     ) -> None:
         if num_workers < 1:
             raise ValueError(f"num_workers must be >= 1, got {num_workers}")
@@ -338,6 +339,10 @@ class WorkerPool:
         self.stats = WorkerPoolStats()
         self._poll_interval = poll_interval
         self._stall_timeout = stall_timeout
+        # Chaos injection (repro.chaos): called as fault_hook(pool, seq) right
+        # after each task is enqueued, so a harness can kill a worker process
+        # at a deterministic submission index and exercise the reclaim path.
+        self._fault_hook = fault_hook
         self._activity = 0  # bumps on every worker message; take()'s stall clock
         self._ctx = mp.get_context("spawn")
         self._shm = shared_memory.SharedMemory(
@@ -407,6 +412,8 @@ class WorkerPool:
         obs.gauge(
             "odb_worker_inflight", help="steps in flight in the worker pool"
         ).set(self.inflight)
+        if self._fault_hook is not None:
+            self._fault_hook(self, seq)
 
     # -- results ---------------------------------------------------------------
     def take(self) -> WorkerResult | None:

@@ -22,10 +22,24 @@ import os
 import pathlib
 import shutil
 import time
+import warnings
+import zipfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
+
+# Failure modes a torn/corrupt npz can present as, depending on where the
+# damage landed (zip directory, member header, deflate stream, missing key).
+_CORRUPT_ERRORS = (
+    OSError,
+    EOFError,
+    ValueError,
+    KeyError,
+    zipfile.BadZipFile,
+    zlib.error,
+)
 
 
 def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
@@ -83,6 +97,16 @@ def latest_step(directory: str | os.PathLike) -> int | None:
         return None
 
 
+def _read_arrays(path: pathlib.Path, keys: list[str]) -> dict[str, np.ndarray]:
+    """Fully materialize a checkpoint's arrays, validating every key.
+
+    npz loading is lazy — a truncated deflate stream only explodes when the
+    member is decompressed — so restore integrity means reading everything
+    up front, inside the caller's corrupt-checkpoint guard."""
+    with np.load(path) as data:
+        return {k: np.asarray(data[k.replace("/", "__SEP__")]) for k in keys}
+
+
 def restore_checkpoint(
     directory: str | os.PathLike,
     state_like: Any,
@@ -95,20 +119,57 @@ def restore_checkpoint(
     ``state_like`` provides the pytree structure (shapes may come from a NEW
     mesh/topology); ``shardings`` (optional pytree of NamedSharding) places
     each restored array — this is where elastic re-sharding happens.
+
+    Corrupt-latest fallback (DESIGN.md §15.6): when restoring ``latest``
+    (``step=None``) and the newest checkpoint is unreadable — torn zip,
+    truncated stream, missing key — restore falls back through the keep-k
+    rotation, newest first, with a ``RuntimeWarning`` naming what was
+    skipped.  An explicitly requested ``step`` never falls back: the caller
+    asked for that artifact, and silently substituting another would be
+    worse than failing.  Shape mismatches are a *topology* error, not
+    corruption, and stay hard errors on every path.
     """
     directory = pathlib.Path(directory)
-    step = step if step is not None else latest_step(directory)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint in {directory}")
-    path = directory / f"step_{step:08d}.npz"
-    data = np.load(path)
     flat, treedef = _flatten(state_like)
+    keys = [k for k, _ in flat]
+    if step is not None:
+        data = _read_arrays(directory / f"step_{step:08d}.npz", keys)
+    else:
+        candidates: list[pathlib.Path] = []
+        pointed = latest_step(directory)
+        if pointed is not None:
+            candidates.append(directory / f"step_{pointed:08d}.npz")
+        for p in sorted(directory.glob("step_*.npz"), reverse=True):
+            if p not in candidates:
+                candidates.append(p)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+        data = None
+        for path in candidates:
+            try:
+                data = _read_arrays(path, keys)
+            except _CORRUPT_ERRORS as exc:
+                warnings.warn(
+                    f"checkpoint {path.name} unreadable "
+                    f"({type(exc).__name__}: {exc}); falling back to the "
+                    "previous keep-k checkpoint",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                continue
+            step = int(path.stem.split("_")[1])
+            break
+        if data is None:
+            raise FileNotFoundError(
+                f"no readable checkpoint in {directory} "
+                f"(tried {[p.name for p in candidates]})"
+            )
     leaves = []
     flat_shardings = (
         jax.tree_util.tree_leaves(shardings) if shardings is not None else None
     )
     for i, (key, like) in enumerate(flat):
-        arr = data[key.replace("/", "__SEP__")]
+        arr = data[key]
         want = np.asarray(like) if not hasattr(like, "shape") else like
         if tuple(arr.shape) != tuple(want.shape):
             raise ValueError(

@@ -272,6 +272,75 @@ class TestCompileOnce:
                 ContinuousBatchingEngine(LM(mla_cfg), None, CONFIG)
 
 
+class TestTtlShedding:
+    """Per-request TTL load shedding at the admission boundary
+    (DESIGN.md §15.7)."""
+
+    def test_saturating_trace_sheds_and_terminates(self, served):
+        from repro import obs
+
+        reg = obs.default_registry()
+        reg.reset()
+        reg.enable()
+        # A fake clock the test drives: one "second" per tick, so queueing
+        # delay is deterministic and the test spends no wall time waiting.
+        clock = {"now": 0.0}
+        # CONFIG unchanged so the engine reuses the module's compiled step
+        # cache (compile-once across tests).
+        engine = make_engine(served)
+        engine.time_fn = lambda: clock["now"]
+        # Saturate: 16 requests into 4 slots.  Half carry a TTL shorter than
+        # the queueing delay the saturation forces; the rest wait forever.
+        rids = []
+        for i, (prompt, new) in enumerate(synth_requests(served[0], 16, seed=7)):
+            rids.append(
+                engine.submit(prompt, new, ttl_s=2.0 if i % 2 else None)
+            )
+        engine.window.close()
+        ticks = 0
+        while not engine.done:
+            clock["now"] += 1.0
+            engine.tick()
+            ticks += 1
+            assert ticks < 500, "saturated engine failed to terminate"
+        from repro.serve import FINISHED, SHED
+
+        states = [engine.requests[rid].state for rid in rids]
+        assert engine.stats.shed > 0
+        assert all(s in (FINISHED, SHED) for s in states), states
+        shed = [r for r in engine.requests.values() if r.state == SHED]
+        for r in shed:
+            assert r.ttl_s is not None  # only TTL-carrying requests shed
+            assert r.finished_s is not None
+            assert r.slot is None  # never reached a slot
+        finished = sum(1 for s in states if s == FINISHED)
+        assert finished + len(shed) == len(rids)
+        assert finished >= 4  # running requests always complete
+        assert reg.counter("odb_serve_shed_total").value == len(shed)
+        assert engine.stats.shed == len(shed)
+        reg.reset()
+
+    def test_running_requests_never_shed(self, served):
+        """A request that reached a slot completes even if its TTL lapses
+        mid-decode: shedding is an admission-boundary decision only."""
+        clock = {"now": 0.0}
+        engine = make_engine(served)
+        engine.time_fn = lambda: clock["now"]
+        prompt, new = synth_requests(served[0], 1, seed=9)[0]
+        rid = engine.submit(prompt, max(new, 4), ttl_s=0.5)
+        engine.window.close()
+        clock["now"] += 0.1
+        engine.tick()  # admits within TTL
+        from repro.serve import FINISHED, RUNNING
+
+        assert engine.requests[rid].state == RUNNING
+        clock["now"] += 100.0  # TTL long expired while running
+        while not engine.done:
+            engine.tick()
+        assert engine.requests[rid].state == FINISHED
+        assert engine.stats.shed == 0
+
+
 class TestTelemetry:
     """One engine tick must emit the documented span + metric set
     (DESIGN.md §13)."""

@@ -243,6 +243,34 @@ class TestPrefetch:
             with pytest.raises(RuntimeError, match="pipeline exploded"):
                 next(it)
 
+    def test_producer_error_with_full_queue_terminates_and_propagates(self):
+        """Regression (DESIGN.md §15): a producer that raises while the
+        bounded queue is full must still terminate — the END sentinel is
+        forced past maxsize — and its exception must surface to the
+        consumer after the buffered items, never hang or be swallowed."""
+
+        def gen():
+            yield 1
+            yield 2
+            raise ValueError("late corruption")
+
+        it = PrefetchIterator(gen(), depth=1)
+        try:
+            assert next(it) == 1
+            # Without consuming further, the producer must still exit: its
+            # queue is full (item 2 staged) when the source raises.
+            deadline = time.time() + 5.0
+            while it.producer_alive and time.time() < deadline:
+                time.sleep(0.005)
+            assert not it.producer_alive, "producer wedged on a full queue"
+            assert next(it) == 2  # buffered item delivered before the error
+            with pytest.raises(ValueError, match="late corruption"):
+                next(it)
+            with pytest.raises(StopIteration):
+                next(it)  # error is one-shot; afterwards it is exhaustion
+        finally:
+            it.close()
+
     def test_close_unblocks_full_queue(self):
         def gen():
             i = 0

@@ -133,6 +133,45 @@ class TestCheckpoint:
         with pytest.raises(ValueError):
             ckpt.restore_checkpoint(tmp_path, {"w": jnp.zeros((3, 3))})
 
+    def test_corrupt_latest_falls_back_to_previous(self, tmp_path):
+        """DESIGN.md §15.6: a torn latest checkpoint (truncated npz) must be
+        detected, warned about, and skipped in favor of the previous keep-k
+        checkpoint — never crash the restart loop, never half-apply."""
+        like = {"w": jnp.zeros((2, 3)), "step": jnp.zeros((), jnp.int32)}
+        for s in (1, 2):
+            state = {
+                "w": jnp.full((2, 3), float(s)),
+                "step": jnp.array(s, jnp.int32),
+            }
+            ckpt.save_checkpoint(tmp_path, s, state, keep=3)
+        latest = pathlib.Path(tmp_path) / "step_00000002.npz"
+        data = latest.read_bytes()
+        latest.write_bytes(data[: len(data) // 2])  # torn write
+        with pytest.warns(RuntimeWarning, match="step_00000002"):
+            restored, step = ckpt.restore_checkpoint(tmp_path, like)
+        assert step == 1
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"]), np.full((2, 3), 1.0)
+        )
+
+    def test_corrupt_explicit_step_never_falls_back(self, tmp_path):
+        """Asking for a specific step and silently getting a different one
+        would be corruption: explicit requests fail hard."""
+        for s in (1, 2):
+            ckpt.save_checkpoint(tmp_path, s, {"w": jnp.full((2,), float(s))})
+        latest = pathlib.Path(tmp_path) / "step_00000002.npz"
+        latest.write_bytes(latest.read_bytes()[:10])
+        with pytest.raises(Exception):
+            ckpt.restore_checkpoint(tmp_path, {"w": jnp.zeros((2,))}, step=2)
+
+    def test_all_checkpoints_corrupt_raises_with_candidates(self, tmp_path):
+        ckpt.save_checkpoint(tmp_path, 1, {"w": jnp.zeros((2,))})
+        p = pathlib.Path(tmp_path) / "step_00000001.npz"
+        p.write_bytes(b"\x00" * 16)
+        with pytest.warns(RuntimeWarning):
+            with pytest.raises(FileNotFoundError, match="step_00000001"):
+                ckpt.restore_checkpoint(tmp_path, {"w": jnp.zeros((2,))})
+
     def test_trainer_resume(self, tmp_path):
         cfg = dataclasses.replace(get_smoke_config("olmo_1b"), vocab_size=128)
         model = LM(cfg)
