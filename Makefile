@@ -4,7 +4,7 @@
 PY ?= python
 PP := PYTHONPATH=src:.
 
-.PHONY: test test-fast bench-smoke bench lint train-smoke chaos-smoke
+.PHONY: test test-fast bench-smoke bench lint train-smoke chaos-smoke multihost-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -18,10 +18,18 @@ bench-smoke:  ## streaming data path + layout + kernel + serving + fault benchma
 	$(PP) $(PY) -m benchmarks.run --kernels
 	$(PP) $(PY) -m benchmarks.run --serving
 	$(PP) $(PY) -m benchmarks.run --faults
+	$(PP) $(PY) -m benchmarks.run --multihost
 	$(MAKE) telemetry-smoke
 
 chaos-smoke:  ## deterministic fault-injection scenarios (BENCH_faults.json rails)
 	$(PP) $(PY) -m benchmarks.run --faults
+
+multihost-smoke:  ## sharded-window digest rails + simulated multi-host train lane
+	$(PP) $(PY) -m benchmarks.run --multihost
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 JAX_PLATFORMS=cpu \
+	  $(PP) $(PY) -m repro.launch.train --arch qwen3_0_6b --smoke --steps 6 \
+	  --world 4 --hosts 2 --l-max 1024 --buffer 32 --prefetch 8 \
+	  --data-scale 0.0005
 
 telemetry-smoke:  ## telemetry-enabled train + serve smoke (metrics.json / trace.json)
 	$(PP) $(PY) -m repro.launch.train --arch qwen3_0_6b --smoke --steps 6 \

@@ -1,0 +1,177 @@
+"""Multi-host sharded-window benchmark — the §16 digest-equality rail.
+
+For each (world, hosts, lookahead) cell the smoke runs the same epoch twice:
+once through the single-process W-rank loopback window (the reference every
+prior subsystem was proven against) and once through P sharded host windows
+behind the router, then reports:
+
+  * ``wall``          — sharded-path wall time for the epoch;
+  * ``overhead``      — sharded / single-process wall ratio (the router and
+    payload fold must be protocol-bookkeeping-cheap);
+  * ``digest_equal``  — the acceptance rail: the delivered stream digest is
+    bit-identical, Theorem-1 coverage and the Theorem-4 round envelope hold.
+
+One cell additionally cuts the epoch mid-stream, checkpoints at P hosts and
+resumes at a different host count — the elastic-restart rail the v4
+per-rank checkpoint schema exists for.
+
+Artifacts: ``<out>/multihost.json`` plus the top-level
+``BENCH_multihost.json`` (CI asserts over its ``rails`` block).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import random
+import time
+
+from benchmarks.common import csv_line
+from repro.chaos import stream_digest
+from repro.chaos.harness import round_bound
+from repro.core import OdbConfig
+from repro.data.datasets import _records_from_lengths
+from repro.data.pipeline import PipelinePolicy
+from repro.stream import StreamCheckpoint, StreamExecutor
+
+POLICY = PipelinePolicy()
+
+# (world, hosts, lookahead): host-count sweep at W=8 plus a tight-lookahead
+# cell where the partitioned sub-budgets actually bind.
+CELLS = [
+    (8, 2, None),
+    (8, 4, None),
+    (8, 8, None),
+    (8, 2, 16),
+    (4, 4, 8),
+]
+
+
+def make_records(n: int, seed: int = 0):
+    rng = random.Random(seed)
+    return _records_from_lengths([rng.randint(16, 900) for _ in range(n)])
+
+
+def _drain(ex: StreamExecutor) -> list:
+    steps = []
+    while True:
+        step = ex.step()
+        if step is None:
+            return steps
+        steps.append(step)
+
+
+def _run(records, world, hosts, lookahead, cfg, seed):
+    t0 = time.perf_counter()
+    ex = StreamExecutor(
+        records, POLICY, world, cfg, seed=seed, lookahead=lookahead,
+        num_hosts=hosts,
+    )
+    steps = _drain(ex)
+    return ex, steps, time.perf_counter() - t0
+
+
+def main(argv=None) -> list[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--records", type=int, default=192)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)  # None -> sys.argv (standalone CLI)
+
+    cfg = OdbConfig(l_max=1024, buffer_size=16, prefetch_factor=8, num_workers=1)
+    records = make_records(args.records, args.seed)
+
+    lines: list[str] = []
+    cells: dict[str, dict] = {}
+    for world, hosts, lookahead in CELLS:
+        ref_ex, ref_steps, ref_wall = _run(
+            records, world, 1, lookahead, cfg, args.seed
+        )
+        ex, steps, wall = _run(records, world, hosts, lookahead, cfg, args.seed)
+        audit = ex.audit()
+        cell = {
+            "world": world,
+            "hosts": hosts,
+            "lookahead": lookahead,
+            "steps": len(steps),
+            "wall_s": wall,
+            "single_process_wall_s": ref_wall,
+            "overhead_x": wall / ref_wall if ref_wall > 0 else 0.0,
+            "digest_equal": stream_digest(steps) == stream_digest(ref_steps),
+            "eta_identity": audit.eta_identity,
+            "rounds": ex.runner.rounds,
+            "round_bound": round_bound(ex),
+        }
+        cells[f"w{world}_p{hosts}_l{lookahead or 'full'}"] = cell
+        lines.append(
+            csv_line(
+                f"multihost/w{world}_p{hosts}_l{lookahead or 'full'}",
+                1e6 * wall,
+                {
+                    "digest_equal": int(cell["digest_equal"]),
+                    "overhead_x": round(cell["overhead_x"], 3),
+                    "steps": len(steps),
+                },
+            )
+        )
+
+    # Elastic resume rail: checkpoint at P=2, resume at P=4 and P=1.
+    world, hosts, lookahead = 4, 2, 24
+    ref_steps = _drain(
+        StreamExecutor(records, POLICY, world, cfg, seed=args.seed,
+                       lookahead=lookahead)
+    )
+    resume = {}
+    for resume_hosts in (4, 1):
+        ex = StreamExecutor(
+            records, POLICY, world, cfg, seed=args.seed, lookahead=lookahead,
+            num_hosts=hosts,
+        )
+        head = [ex.step() for _ in range(max(2, len(ref_steps) // 3))]
+        blob = ex.checkpoint().to_json()
+        resumed = StreamExecutor.resume(
+            StreamCheckpoint.from_json(blob), records, POLICY,
+            num_hosts=resume_hosts,
+        )
+        tail = _drain(resumed)
+        resume[f"p{hosts}_to_p{resume_hosts}"] = {
+            "digest_equal": stream_digest(head + tail)
+            == stream_digest(ref_steps),
+            "checkpoint_bytes": len(blob),
+        }
+
+    rails = {
+        "digest_equal": all(c["digest_equal"] for c in cells.values()),
+        "identity_coverage": all(
+            c["eta_identity"] == 0.0 for c in cells.values()
+        ),
+        "bounded_termination": all(
+            c["rounds"] <= c["round_bound"] for c in cells.values()
+        ),
+        "elastic_resume": all(r["digest_equal"] for r in resume.values()),
+        "failed": sorted(
+            k for k, c in cells.items() if not c["digest_equal"]
+        ),
+    }
+    artifact = {
+        "config": {"records": args.records, "seed": args.seed},
+        "cells": cells,
+        "resume": resume,
+        "rails": rails,
+    }
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "multihost.json").write_text(json.dumps(artifact, indent=1))
+    pathlib.Path("BENCH_multihost.json").write_text(
+        json.dumps(artifact, indent=1)
+    )
+    if not (rails["digest_equal"] and rails["elastic_resume"]):
+        raise RuntimeError(f"multihost digest rails failed: {rails}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in main():
+        print(line)

@@ -21,6 +21,9 @@ under ``artifacts/bench/``.
   faults             — deterministic chaos scenarios with bounded-termination
                        and bit-exact/accounted recovery rails
                        (emits BENCH_faults.json; also `run.py --faults`)
+  multihost          — sharded-window host-count sweep with the §16
+                       digest-equality + elastic-resume rails
+                       (emits BENCH_multihost.json; also `run.py --multihost`)
 
 Select one module by name (``run.py streaming``) or flag (``run.py
 --streaming``); no argument runs everything.
@@ -39,6 +42,7 @@ def main() -> None:
         join_and_scaling,
         kernels,
         layout,
+        multihost,
         protocol_audit,
         roofline_bench,
         serving,
@@ -57,6 +61,7 @@ def main() -> None:
         ("kernels", kernels),
         ("serving", serving),
         ("faults", faults),
+        ("multihost", multihost),
     ]
     only = sys.argv[1].lstrip("-") if len(sys.argv) > 1 else None
     names = [name for name, _ in modules]

@@ -53,6 +53,11 @@ class RankTimeoutError(RuntimeError):
     transport, so every rank still holds its pre-gather state and an
     executor checkpoint taken afterwards resumes the identical round
     (``StreamExecutor`` converts this into a resumable ``EpochAborted``).
+
+    ``failed_ranks`` carries EVERY rank that failed the final attempt (a
+    correlated fault — a downed host — takes out several at once), with
+    per-rank reasons in ``failures``; ``rank`` keeps the first for
+    backward-compatible callers.
     """
 
     def __init__(
@@ -62,11 +67,17 @@ class RankTimeoutError(RuntimeError):
         rank: int | None = None,
         round_index: int | None = None,
         attempts: int = 0,
+        failed_ranks: Sequence[int] | None = None,
+        failures: Sequence[tuple[int, str]] | None = None,
     ) -> None:
         super().__init__(message)
         self.rank = rank
         self.round_index = round_index
         self.attempts = attempts
+        if failed_ranks is None:
+            failed_ranks = [] if rank is None else [rank]
+        self.failed_ranks = list(failed_ranks)
+        self.failures = [tuple(f) for f in (failures or [])]
 
 
 @dataclasses.dataclass
@@ -149,20 +160,141 @@ class JaxProcessCollective(Collective):
     """Multi-host backend over jax.experimental.multihost_utils.
 
     One payload per host process; uses ``process_allgather`` on a flat int64
-    metadata vector (the paper's [idx_budget, n_groups, sizes, tokens] layout,
-    ~(2 + 2*buffer_size) int64 per rank).  Only functional under a real
-    multi-process JAX runtime; provided for deployment parity.
+    metadata vector (the paper's [idx_budget, n_groups, sizes, tokens] layout
+    extended by the §16 window summary — see :func:`encode_round_payload`).
+    Functional for real ``world_size == 1`` on any runtime; larger worlds
+    need a real multi-process JAX runtime (one Python process per host).
+
+    Audited like :class:`LoopbackCollective`: per-tag call counts are
+    tracked (every rank-driven round is exactly one ``all_gather`` per tag,
+    Lemma 3), and a gather that returns the wrong number of payloads —
+    the rank-driven symptom of a peer calling out of lockstep — raises
+    :class:`ProtocolDesyncError` instead of silently mis-slicing.
     """
+
+    def __init__(self, world_size: int) -> None:
+        super().__init__(world_size)
+        self.calls_per_tag: dict[str, int] = {}
 
     def all_gather(self, rank: int, payload: Any, *, tag: str = "primary") -> list[Any]:
         import numpy as np
         from jax.experimental import multihost_utils
 
         arr = np.asarray(payload, dtype=np.int64)
-        gathered = multihost_utils.process_allgather(arr)
+        gathered = np.asarray(multihost_utils.process_allgather(arr))
+        if gathered.ndim == arr.ndim:
+            # world_size == 1 runtimes return the input shape un-stacked.
+            gathered = gathered[None, ...]
+        if gathered.shape[0] != self.world_size:
+            raise ProtocolDesyncError(
+                f"gather returned {gathered.shape[0]} payloads for "
+                f"world_size {self.world_size}: a peer called all_gather "
+                f"out of lockstep (tag={tag!r})"
+            )
+        self.calls_per_tag[tag] = self.calls_per_tag.get(tag, 0) + 1
+        primary = self.calls_per_tag.get("primary", 0)
+        for t, n in self.calls_per_tag.items():
+            if t != "primary" and n > primary:
+                raise ProtocolDesyncError(
+                    f"uniform all_gather invariant violated: tag {t!r} "
+                    f"called {n}x against {primary} primary rounds"
+                )
         out = [gathered[i] for i in range(gathered.shape[0])]
-        self.stats.record(out, secondary=(tag != "primary"))
+        self.stats.record([o.tolist() for o in out], secondary=(tag != "primary"))
         return out
+
+
+# -- int64 wire codec for the round payload (deployment parity) ---------------
+#
+# ``LoopbackCollective`` moves the payload dict by reference; the rank-driven
+# transport moves a flat int64 vector per process.  The layout extends the
+# paper's [idx_budget, n_groups, sizes, tokens] schema with the §16 window
+# summary so a real multi-host deployment exchanges admission state in the
+# same single unconditional gather:
+#
+#   [ idx_budget, n_groups, n,
+#     sizes[0..cap), tokens[0..cap),            # zero-padded to group cap
+#     has_window, host, cursor, staged, delivered, resident,
+#     qids[0..qcap) ]                           # -1-padded charged |X| ids
+
+_WINDOW_SLOTS = 6  # has_window flag + the five summary fields
+
+
+def round_payload_length(group_capacity: int, quarantine_capacity: int = 0) -> int:
+    return 3 + 2 * group_capacity + _WINDOW_SLOTS + quarantine_capacity
+
+
+def encode_round_payload(
+    payload: dict, *, group_capacity: int, quarantine_capacity: int = 0
+):
+    """Flatten one rank's round payload dict to the fixed int64 wire layout."""
+    import numpy as np
+
+    sizes = list(payload.get("sizes", ()))
+    tokens = list(payload.get("tokens", ()))
+    if len(sizes) > group_capacity or len(tokens) > group_capacity:
+        raise ValueError(
+            f"{max(len(sizes), len(tokens))} groups exceed wire capacity "
+            f"{group_capacity}"
+        )
+    vec = np.zeros(
+        round_payload_length(group_capacity, quarantine_capacity), np.int64
+    )
+    vec[0] = payload["idx_budget"]
+    vec[1] = payload["n_groups"]
+    vec[2] = len(sizes)
+    vec[3 : 3 + len(sizes)] = sizes
+    base = 3 + group_capacity
+    vec[base : base + len(tokens)] = tokens
+    wbase = 3 + 2 * group_capacity
+    window = payload.get("window")
+    qids: list[int] = []
+    if window is not None:
+        vec[wbase] = 1
+        vec[wbase + 1] = window.get("host", 0)
+        vec[wbase + 2] = window.get("cursor", 0)
+        vec[wbase + 3] = window.get("staged", 0)
+        vec[wbase + 4] = window.get("delivered", 0)
+        vec[wbase + 5] = window.get("resident", 0)
+        qids = list(window.get("quarantined_ids", ()))
+        if len(qids) > quarantine_capacity:
+            raise ValueError(
+                f"{len(qids)} quarantined ids exceed wire capacity "
+                f"{quarantine_capacity}"
+            )
+    qbase = wbase + _WINDOW_SLOTS
+    vec[qbase:] = -1
+    vec[qbase : qbase + len(qids)] = qids
+    return vec
+
+
+def decode_round_payload(
+    vec, *, group_capacity: int, quarantine_capacity: int = 0
+) -> dict:
+    """Invert :func:`encode_round_payload` back to the payload dict."""
+    vec = [int(v) for v in vec]
+    expected = round_payload_length(group_capacity, quarantine_capacity)
+    if len(vec) != expected:
+        raise ValueError(f"wire payload length {len(vec)} != {expected}")
+    n = vec[2]
+    out: dict[str, Any] = {
+        "idx_budget": vec[0],
+        "n_groups": vec[1],
+        "sizes": vec[3 : 3 + n],
+        "tokens": vec[3 + group_capacity : 3 + group_capacity + n],
+    }
+    wbase = 3 + 2 * group_capacity
+    if vec[wbase]:
+        qbase = wbase + _WINDOW_SLOTS
+        out["window"] = {
+            "host": vec[wbase + 1],
+            "cursor": vec[wbase + 2],
+            "staged": vec[wbase + 3],
+            "delivered": vec[wbase + 4],
+            "resident": vec[wbase + 5],
+            "quarantined_ids": [q for q in vec[qbase:] if q >= 0],
+        }
+    return out
 
 
 def _unit_jitter(*parts: object) -> float:
@@ -285,13 +417,23 @@ class ResilientCollective(Collective):
             self._m_retries.inc()
             attempt += 1
             if attempt > self.max_retries:
-                rank, why = failures[0] if failures else (None, "timeout")
+                # Report EVERY failed rank, not just the first: the straggler
+                # census, stream_abort.json and the operator's restart
+                # decision all need the full casualty list of the round.
+                ranks = [r for r, _ in failures]
+                detail = (
+                    "; ".join(f"rank {r}: {why}" for r, why in failures)
+                    or "timeout"
+                )
                 raise RankTimeoutError(
-                    f"round {round_index} ({tag}): rank {rank} failed delivery "
-                    f"after {attempt} attempts ({why})",
-                    rank=rank,
+                    f"round {round_index} ({tag}): ranks "
+                    f"{ranks if ranks else '?'} failed delivery "
+                    f"after {attempt} attempts ({detail})",
+                    rank=ranks[0] if ranks else None,
                     round_index=round_index,
                     attempts=attempt,
+                    failed_ranks=ranks,
+                    failures=failures,
                 )
             self.sleep_fn(self._backoff_delay(round_index, attempt))
 

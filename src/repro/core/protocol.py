@@ -121,6 +121,19 @@ class ViewSource:
     def remaining(self, rank: int) -> int:  # pragma: no cover
         raise NotImplementedError
 
+    # -- distributed-window fold (DESIGN.md §16; optional) ---------------------
+    def shard_state(self, rank: int) -> dict | None:
+        """Per-rank admission summary to fold into the round gather payload.
+
+        ``None`` (the default) keeps the payload schema unchanged; a sharded
+        window returns its host-local cursor/resident/quarantine summary so
+        every host observes global admission state once per round.
+        """
+        return None
+
+    def absorb_gathered(self, states: Sequence[dict | None]) -> None:
+        """Merge the gathered per-rank window summaries (post-gather)."""
+
 
 class RankRuntime:
     """Per-rank protocol state: the (R, Q, B, E) machine of App. C.1."""
@@ -325,6 +338,7 @@ class OdbProtocolEngine:
         self.equal_quota = len(quotas) == 1
         self.config = config
         self.collective = collective or LoopbackCollective(world)
+        self.source = source
         self.ranks = [
             RankRuntime(r, views, config, source=source)
             for r, views in enumerate(per_rank_views)
@@ -396,7 +410,11 @@ class OdbProtocolEngine:
                 rank.fetch_and_drain()
 
         # Phase 2: candidate groups + primary all_gather payloads (Lemma 3:
-        # one unconditional gather per round, on every rank).
+        # one unconditional gather per round, on every rank).  With a sharded
+        # admission window (DESIGN.md §16) each rank's payload also carries
+        # its host window's per-rank summary, so group formation and quota
+        # closure downstream observe GLOBAL admission state — the distributed
+        # deployment's only cross-host window channel.
         candidates: list[list[Group]] = []
 
         def payload(r: int):
@@ -405,16 +423,25 @@ class OdbProtocolEngine:
             status = -1 if self.ranks[r].local_finished else self.ranks[r].status_code(groups)
             sizes = [g.size for g in groups]
             tokens = [g.real_tokens for g in groups]
-            return {
+            p = {
                 "idx_budget": self.ranks[r].idx_budget,
                 "n_groups": status,
                 "sizes": sizes,
                 "tokens": tokens,
             }
+            if self.source is not None:
+                shard = self.source.shard_state(r)
+                if shard is not None:
+                    p["window"] = shard
+            return p
 
         gathered = self.collective.gather_round(payload)
         statuses = tuple(p["n_groups"] for p in gathered)
         idx_budgets = tuple(p["idx_budget"] for p in gathered)
+        if self.source is not None:
+            window_states = [p.get("window") for p in gathered]
+            if any(ws is not None for ws in window_states):
+                self.source.absorb_gathered(window_states)
 
         # Phase 3: alignment target over active ranks (identical on all ranks:
         # pure function of the gathered tensor).

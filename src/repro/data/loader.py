@@ -127,6 +127,7 @@ class OnlineDynamicLoader:
         policy: PipelinePolicy | None = None,
         seed: int = 0,
         vocab_size: int = 32000,
+        num_hosts: int = 1,
     ) -> None:
         self.dataset = dataset
         self.world_size = world_size
@@ -134,6 +135,7 @@ class OnlineDynamicLoader:
         self.policy = policy or dataset.policy
         self.seed = seed
         self.vocab_size = vocab_size
+        self.num_hosts = num_hosts
         self.bucket_spec = bucket_spec or BucketSpec(
             max_len=self.policy.cutoff_len, max_count=4096
         )
@@ -271,7 +273,14 @@ class OnlineDynamicLoader:
                     f"{ck_lookahead}, but lookahead={lookahead} was requested"
                 )
             executor = StreamExecutor.resume(
-                resume_from, records, self.policy, fault_injector=fault_injector
+                resume_from,
+                records,
+                self.policy,
+                fault_injector=fault_injector,
+                # Resume at the loader's *current* host count: v4 window
+                # state is per-rank, so an elastic host-count change
+                # continues the identical step sequence (DESIGN.md §16).
+                num_hosts=self.num_hosts,
             )
         else:
             executor = StreamExecutor(
@@ -283,6 +292,7 @@ class OnlineDynamicLoader:
                 epoch=epoch,
                 lookahead=lookahead,
                 fault_injector=fault_injector,
+                num_hosts=self.num_hosts,
             )
         self.last_executor = executor
 

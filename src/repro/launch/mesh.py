@@ -46,8 +46,30 @@ def make_host_mesh(model_parallel: int = 1):
     )
 
 
+def make_sim_multihost_mesh(num_hosts: int, model_parallel: int = 1):
+    """Mesh with an explicit outer ``host`` DP axis for the simulated
+    multi-host lane (``--hosts``, DESIGN.md §16).
+
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so the
+    CPU runtime exposes enough devices; each host owns a contiguous device
+    block, matching the contiguous rank-block partition `ShardedWindow`
+    uses, so host ``h``'s admitted shard lands on host ``h``'s devices.
+    """
+    n = jax.device_count()
+    if num_hosts < 1 or n % (num_hosts * model_parallel) != 0:
+        raise ValueError(
+            f"device count {n} not divisible by hosts={num_hosts} "
+            f"x model_parallel={model_parallel}"
+        )
+    return jax.make_mesh(
+        (num_hosts, n // (num_hosts * model_parallel), model_parallel),
+        ("host", "data", "model"),
+        **_axis_kwargs(3),
+    )
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tuple(a for a in ("pod", "host", "data") if a in mesh.axis_names)
 
 
 def dp_size(mesh) -> int:

@@ -8,6 +8,10 @@ Conventions:
     grad reduce-scatter automatically, incl. at shard_map boundaries).
   * ``pod`` axis: pure DP — params replicated across pods so weight
     gathers never cross the DCN; only gradient reduction does.
+  * ``host`` axis (simulated multi-host lane, DESIGN.md §16): outer pure-DP
+    axis from :func:`make_sim_multihost_mesh`; ``dp_axes`` folds it into
+    the batch partition so each host's contiguous device block consumes
+    the shard its ``ShardedWindow`` admitted.
   * Input shardings must divide evenly (pjit requirement) — every rule
     checks divisibility and falls back to replication; intermediates may
     be uneven (GSPMD pads).

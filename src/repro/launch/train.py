@@ -133,6 +133,14 @@ def main() -> None:
         help="enable the obs subsystem and write metrics.json / trace.json / "
              "rounds.json into DIR at exit (DESIGN.md §13)",
     )
+    ap.add_argument(
+        "--hosts", type=int, default=1,
+        help="simulated multi-host lane (DESIGN.md §16): partition the DGAP "
+             "ranks over this many sharded admission windows, each running "
+             "its own cursor over its rank block. Run under "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=N to give "
+             "each simulated host its own device block; must divide --world",
+    )
     args = ap.parse_args()
 
     reporter = None
@@ -170,6 +178,7 @@ def main() -> None:
         bucket_spec=bucket_spec,
         layout=layout,
         vocab_size=cfg.vocab_size,
+        num_hosts=args.hosts,
     )
     trainer = Trainer(
         model, loader,
@@ -200,6 +209,10 @@ def main() -> None:
                 f"[train] epoch aborted ({exc.cause}); "
                 f"restart {restarts}/{args.max_restarts}"
             )
+            if exc.failed_ranks:
+                # Full casualty list, not just the first straggler — a
+                # multi-rank stall usually means a shared link, not a node.
+                print(f"[train] failed ranks: {exc.failed_ranks}")
             if args.checkpoint_dir:
                 # The abort carries a valid stream checkpoint; persist it
                 # beside the model checkpoints so an operator (or the next

@@ -59,6 +59,11 @@ class RoundTimeline:
         # Cumulative duration histogram on the shared bucket grid.
         self.duration_buckets = [0] * (len(ROUND_DURATION_BUCKETS) + 1)
         self.closures: list[dict] = []
+        # Abort census: one entry per epoch abort, carrying the *full*
+        # failed-rank list (a multi-rank stall is the common failure mode on
+        # real fabrics; reporting only the first rank hides the blast
+        # radius from stream_abort.json and the post-mortem).
+        self.aborts: list[dict] = []
         # Rolling window of the most recent per-round records (bounded so a
         # long epoch cannot grow the checkpoint without bound).
         self.records: list[dict] = []
@@ -102,6 +107,24 @@ class RoundTimeline:
             {"event": event, "iteration": iteration, "iteration_rounds": rounds}
         )
 
+    def record_abort(
+        self,
+        failed_ranks,
+        *,
+        round_index: int | None = None,
+        attempts: int = 0,
+        reason: str = "",
+    ) -> None:
+        """One epoch abort with its complete straggler casualty list."""
+        self.aborts.append(
+            {
+                "failed_ranks": sorted(set(int(r) for r in failed_ranks)),
+                "round_index": round_index,
+                "attempts": attempts,
+                "reason": reason,
+            }
+        )
+
     # -- views / serialization -------------------------------------------------
     def as_dict(self) -> dict:
         hist = {}
@@ -119,6 +142,7 @@ class RoundTimeline:
             "straggler_rounds_per_rank": list(self.straggler_rounds),
             "duration_histogram_le": hist,
             "closures": list(self.closures),
+            "aborts": list(self.aborts),
             "records": list(self.records),
             "records_dropped": self.records_dropped,
         }
@@ -140,6 +164,7 @@ class RoundTimeline:
             previous = running
         timeline.duration_buckets[-1] = timeline.rounds - previous
         timeline.closures = list(state["closures"])
+        timeline.aborts = list(state.get("aborts", []))
         timeline.records = list(state["records"])
         timeline.records_dropped = state.get("records_dropped", 0)
         return timeline

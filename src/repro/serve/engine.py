@@ -296,17 +296,21 @@ class ContinuousBatchingEngine:
         self.waiting = kept
 
     def _admit(self) -> list[Sample]:
-        if not self.config.continuous and self.slots.active_count > 0:
-            return []  # static batching: drain fully before refilling
-        free = self.slots.free_count
-        if free == 0:
-            return []
         # Hold a grouping pool of up to 2·num_slots realized requests; the
         # window's lookahead bounds realization no matter how greedy this is.
         want = 2 * self.config.num_slots - len(self.waiting)
         if want > 0:
             self.waiting.extend(self.window.take(0, want))
+        # Shed before any early return: under full-slot saturation (free==0,
+        # the regime §15.7 exists for) expired waiters must still retire this
+        # tick, or a saturated engine never drains its queue and the
+        # closed-queue termination claim fails.
         self._shed_expired()
+        if not self.config.continuous and self.slots.active_count > 0:
+            return []  # static batching: drain fully before refilling
+        free = self.slots.free_count
+        if free == 0:
+            return []
         if not self.waiting:
             return []
         if not self.config.continuous:

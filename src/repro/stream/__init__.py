@@ -1,11 +1,20 @@
 """Streaming DGAP execution: bounded-lookahead admission, incremental
-scheduling, async prefetch, multi-process realization workers, and resumable
-loader state (DESIGN.md §9, §14)."""
+scheduling, async prefetch, multi-process realization workers, resumable
+loader state, and the sharded multi-host window (DESIGN.md §9, §14, §16)."""
 
 from repro.stream.executor import EpochAborted, StreamExecutor
 from repro.stream.prefetch import PrefetchIterator, PrefetchStats
 from repro.stream.state import StreamCheckpoint
-from repro.stream.window import AdmissionWindow, BoundedWindow, WindowStats
+from repro.stream.window import (
+    AdmissionWindow,
+    BoundedWindow,
+    QuarantineLedger,
+    ShardedWindow,
+    WindowRouter,
+    WindowStats,
+    host_rank_blocks,
+    split_lookahead,
+)
 from repro.stream.workers import WorkerPool, WorkerPoolStats, WorkerResult
 
 __all__ = [
@@ -14,10 +23,15 @@ __all__ = [
     "EpochAborted",
     "PrefetchIterator",
     "PrefetchStats",
+    "QuarantineLedger",
+    "ShardedWindow",
     "StreamCheckpoint",
     "StreamExecutor",
+    "WindowRouter",
     "WindowStats",
     "WorkerPool",
     "WorkerPoolStats",
     "WorkerResult",
+    "host_rank_blocks",
+    "split_lookahead",
 ]

@@ -64,7 +64,13 @@ from repro.stream.state import (
     step_from_json,
     step_to_json,
 )
-from repro.stream.window import AdmissionWindow, WindowStats
+from repro.stream.window import (
+    AdmissionWindow,
+    QuarantineLedger,
+    ShardedWindow,
+    WindowRouter,
+    WindowStats,
+)
 
 
 class EpochAborted(RuntimeError):
@@ -76,6 +82,11 @@ class EpochAborted(RuntimeError):
     :meth:`checkpoint` (lazy — taken on first call, under the executor lock)
     yields a valid stream checkpoint from which ``StreamExecutor.resume``
     replays the aborted round and continues the identical step sequence.
+
+    ``failed_ranks`` forwards the cause's full casualty list (every rank
+    that failed the final delivery attempt, not just the first), so abort
+    handling — operator logs, ``stream_abort.json`` — keeps the whole
+    straggler census.
     """
 
     def __init__(self, cause: BaseException, executor: "StreamExecutor") -> None:
@@ -83,6 +94,10 @@ class EpochAborted(RuntimeError):
         self.cause = cause
         self._executor = executor
         self._checkpoint: StreamCheckpoint | None = None
+
+    @property
+    def failed_ranks(self) -> list[int]:
+        return list(getattr(self.cause, "failed_ranks", []) or [])
 
     def checkpoint(self) -> StreamCheckpoint:
         if self._checkpoint is None:
@@ -106,6 +121,7 @@ class StreamExecutor:
         max_logical_iterations: int = 64,
         dataset_identities: int | None = None,
         fault_injector=None,
+        num_hosts: int = 1,
     ) -> None:
         n = len(records) if dataset_identities is None else dataset_identities
         self.records = records
@@ -115,6 +131,17 @@ class StreamExecutor:
         self.epoch = epoch
         self.max_logical_iterations = max_logical_iterations
         self.spec = SamplerSpec(dataset_size=n, world_size=world_size, seed=seed)
+        if num_hosts < 1 or world_size % num_hosts != 0:
+            raise ValueError(
+                f"num_hosts {num_hosts} must be a positive divisor of "
+                f"world_size {world_size} (each host owns an equal rank block)"
+            )
+        # P > 1 runs one ShardedWindow per host behind a WindowRouter — the
+        # in-process simulation of a multi-host deployment (DESIGN.md §16).
+        # The delivered step stream is bit-identical for every host count:
+        # window state is per-rank decomposed, so partitioning ranks over
+        # hosts changes nothing the protocol can observe.
+        self.num_hosts = num_hosts
         self.lookahead = (
             self.spec.total_views if lookahead is None else lookahead
         )
@@ -143,7 +170,7 @@ class StreamExecutor:
         # recovery is checkpoint + resume, not silent retry-forever.
         self.aborted = False
         self._abort_cause: BaseException | None = None
-        self.window: AdmissionWindow | None = None
+        self.window: AdmissionWindow | WindowRouter | None = None
         self._closed_window_stats: list[WindowStats] = []
         # step()/checkpoint()/audit() are serialized so a checkpoint taken
         # from the trainer thread while a prefetch producer thread is inside
@@ -184,28 +211,65 @@ class StreamExecutor:
         # identity across logical iterations forever (Theorem 2 caveat, §15).
         self.runner.note_quarantine(identity)
 
+    def _on_remote_quarantine(self, identity: int) -> None:
+        # §16 merge path: an identity another host's window quarantined
+        # arrives through the gather payload.  Folding it into the runner
+        # keeps non-join closure on the MERGED |X| even when host ledgers
+        # are not shared (a real deployment); in the in-process lane the
+        # shared ledger makes this a no-op by idempotence.
+        self.runner.note_quarantine(identity)
+
     # -- iteration factory -----------------------------------------------------
-    def _make_window(self, iteration: int) -> AdmissionWindow:
+    def _make_window(self, iteration: int) -> AdmissionWindow | WindowRouter:
         # The quarantine budget is per *epoch* and charges each distinct
         # sample once: a new window gets whatever headroom earlier iterations
         # left unspent, and identities already in X are exempt — a non-join
         # catch-up iteration (or a resumed run) re-walks the order and meets
         # the same deterministically-failing sample again, which must not
         # re-spend the budget.
-        window = AdmissionWindow(
-            self.records,
-            self.policy,
-            self.spec,
+        budget = max(
+            0, self.config.max_quarantine - len(self.runner.quarantined_ids)
+        )
+        exempt = frozenset(self.runner.quarantined_ids)
+        kwargs = dict(
             shuffle_epoch=iteration_shuffle_epoch(self.epoch, iteration),
             pipeline_epoch=self.epoch,
             lookahead=self.lookahead,
             view_id_base=iteration * ITERATION_VIEW_ID_STRIDE,
-            max_quarantine=max(
-                0, self.config.max_quarantine - len(self.runner.quarantined_ids)
-            ),
-            quarantine_exempt=frozenset(self.runner.quarantined_ids),
         )
+        window: AdmissionWindow | WindowRouter
+        if self.num_hosts == 1:
+            window = AdmissionWindow(
+                self.records,
+                self.policy,
+                self.spec,
+                max_quarantine=budget,
+                quarantine_exempt=exempt,
+                **kwargs,
+            )
+        else:
+            # One window per simulated host, all over the same deterministic
+            # order, each serving only its rank block.  The ledger is shared
+            # so the per-epoch quarantine budget charges each distinct
+            # sample once regardless of which host hits the failure first
+            # (the padded order repeats identities across rank blocks).
+            ledger = QuarantineLedger(budget, exempt)
+            window = WindowRouter(
+                [
+                    ShardedWindow(
+                        self.records,
+                        self.policy,
+                        self.spec,
+                        host=host,
+                        num_hosts=self.num_hosts,
+                        ledger=ledger,
+                        **kwargs,
+                    )
+                    for host in range(self.num_hosts)
+                ]
+            )
         window.on_quarantine = self._on_quarantine
+        window.on_remote_quarantine = self._on_remote_quarantine
         return window
 
     def _make_engine(self, iteration: int) -> OdbProtocolEngine:
@@ -214,7 +278,9 @@ class StreamExecutor:
         self.window = self._make_window(iteration)
         return self._build_engine(self.window)
 
-    def _build_engine(self, window: AdmissionWindow) -> OdbProtocolEngine:
+    def _build_engine(
+        self, window: AdmissionWindow | WindowRouter
+    ) -> OdbProtocolEngine:
         # A lookahead tighter than the depth envelope throttles fetches to
         # O(lookahead/W) views per rank per round, so the Theorem-4 guard
         # widens from q + O(D) to q + O(D) + O(M) — still a hard finite
@@ -257,6 +323,14 @@ class StreamExecutor:
                 # checkpoint is valid and resume replays the aborted round.
                 self.aborted = True
                 self._abort_cause = exc
+                # Full casualty list into the round audit: the abort record
+                # (and the checkpoint it rides in) names EVERY failed rank.
+                self.telemetry.record_abort(
+                    exc.failed_ranks,
+                    round_index=exc.round_index,
+                    attempts=exc.attempts,
+                    reason=str(exc),
+                )
                 raise EpochAborted(exc, self) from exc
             if out is not None:
                 self._m_steps.inc()
@@ -331,6 +405,10 @@ class StreamExecutor:
             "version": STATE_VERSION,
             "seed": self.seed,
             "epoch": self.epoch,
+            # The host partition the checkpoint was TAKEN at — informational:
+            # window state is per-rank (v4), so resume may regroup the ranks
+            # onto any other divisor host count bit-exactly.
+            "num_hosts": self.num_hosts,
             "world_size": self.spec.world_size,
             "dataset_identities": self.spec.dataset_size,
             "lookahead": self.lookahead,
@@ -396,6 +474,7 @@ class StreamExecutor:
         policy: PipelinePolicy,
         *,
         fault_injector=None,
+        num_hosts: int | None = None,
     ) -> "StreamExecutor":
         """Rebuild an executor that continues the checkpointed step sequence.
 
@@ -403,6 +482,11 @@ class StreamExecutor:
         not state); the policy fingerprint is verified so a silently changed
         transform policy — which would drift realized lengths and break
         exact-identity coverage — fails loudly instead.
+
+        ``num_hosts`` may differ from the checkpointing run's: v4 window
+        state is per-rank, so an elastic restart regroups the rank states
+        onto the new host partition and continues the identical step
+        sequence (DESIGN.md §16).  ``None`` keeps the checkpointed count.
         """
         p = checkpoint.payload
         if policy.cache_key("stream") != p["policy_key"]:
@@ -425,6 +509,7 @@ class StreamExecutor:
             max_logical_iterations=p["max_logical_iterations"],
             dataset_identities=p["dataset_identities"],
             fault_injector=fault_injector,
+            num_hosts=p.get("num_hosts", 1) if num_hosts is None else num_hosts,
         )
         rs = p["runner"]
         runner = ex.runner

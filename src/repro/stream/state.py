@@ -33,12 +33,17 @@ from typing import Any
 from repro.core.grouping import Group, Sample
 from repro.core.protocol import IDLE, OdbConfig, RankCounters, RankRuntime
 
-# v3: quarantine component X rides the checkpoint (runner quarantined ids +
+# v4: distributed window (DESIGN.md §16) — window state is keyed per *rank*
+# (cursors/staged/delivered lists) instead of a single global cursor, the
+# payload records ``num_hosts``, and the round audit carries the abort
+# census; per-rank keying is what makes resume-at-a-different-host-count
+# bit-exact, so earlier versions are rejected.
+# v3: quarantine component X rode the checkpoint (runner quarantined ids +
 # per-window quarantine records, DESIGN.md §15) so a resumed run keeps the
-# extended (R, Q, B, E, X) accounting; earlier versions are rejected.
+# extended (R, Q, B, E, X) accounting.
 # v2: emitted ledgers shrank to count + identity bitmap (ROADMAP "checkpoint
 # size"); v1 checkpoints carried per-sample emitted lists and are rejected.
-STATE_VERSION = 3
+STATE_VERSION = 4
 
 
 # -- identity bitmap codec ----------------------------------------------------

@@ -1,0 +1,296 @@
+"""Collective transport contracts (DESIGN.md §15, §16).
+
+Direct coverage for the pieces the engine-level suites only exercise
+implicitly:
+
+  * ``JaxProcessCollective`` — the rank-driven multi-host backend: real
+    ``process_allgather`` path at world_size=1, a forced multi-process
+    simulated lane (stubbed transport), and the same uniform-call audit /
+    desync semantics ``LoopbackCollective`` enforces;
+  * the int64 wire codec that flattens the round payload (including the
+    §16 window summary) for the rank-driven transport;
+  * ``ResilientCollective`` on the rank-driven path: watchdog deadline over
+    a wedged gather, and the full failed-rank list on exhaustion —
+    threaded through ``EpochAborted`` and the ``RoundTimeline`` abort
+    census (the straggler-reporting bugfix).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+from jax.experimental import multihost_utils
+
+from repro import obs
+from repro.core.comm import (
+    JaxProcessCollective,
+    LoopbackCollective,
+    ProtocolDesyncError,
+    RankTimeoutError,
+    ResilientCollective,
+    decode_round_payload,
+    encode_round_payload,
+    round_payload_length,
+)
+from repro.core import OdbConfig
+from repro.data.datasets import _records_from_lengths
+from repro.data.pipeline import PipelinePolicy
+from repro.stream import EpochAborted, StreamExecutor
+
+POLICY = PipelinePolicy()
+
+
+def make_records(n: int, seed: int = 0):
+    import random
+
+    rng = random.Random(seed)
+    return _records_from_lengths([rng.randint(16, 900) for _ in range(n)])
+
+
+def small_cfg(**kw) -> OdbConfig:
+    base = dict(l_max=1024, buffer_size=16, prefetch_factor=8, num_workers=1)
+    base.update(kw)
+    return OdbConfig(**base)
+
+
+class ScriptedInjector:
+    """Faults from an explicit {(round, attempt, rank): fault} script."""
+
+    def __init__(self, script):
+        self.script = script
+
+    def on_gather(self, round_index, attempt, rank, tag):
+        return self.script.get((round_index, attempt, rank))
+
+
+# -----------------------------------------------------------------------------
+# Wire codec
+# -----------------------------------------------------------------------------
+
+
+class TestWireCodec:
+    PAYLOAD = {
+        "idx_budget": 17,
+        "n_groups": 2,
+        "sizes": [4, 3],
+        "tokens": [900, 512],
+        "window": {
+            "host": 1,
+            "cursor": 9,
+            "staged": 2,
+            "delivered": 7,
+            "resident": 5,
+            "quarantined_ids": [3, 42],
+        },
+    }
+
+    def test_roundtrip_with_window(self):
+        vec = encode_round_payload(
+            self.PAYLOAD, group_capacity=4, quarantine_capacity=4
+        )
+        assert vec.dtype == np.int64
+        assert len(vec) == round_payload_length(4, 4)
+        assert decode_round_payload(
+            vec, group_capacity=4, quarantine_capacity=4
+        ) == self.PAYLOAD
+
+    def test_roundtrip_without_window(self):
+        payload = {k: v for k, v in self.PAYLOAD.items() if k != "window"}
+        vec = encode_round_payload(payload, group_capacity=4)
+        out = decode_round_payload(vec, group_capacity=4)
+        assert "window" not in out
+        assert out == payload
+
+    def test_negative_status_survives(self):
+        """Finished ranks gather n_groups = -1; the codec must not clamp."""
+        payload = {"idx_budget": 0, "n_groups": -1, "sizes": [], "tokens": []}
+        vec = encode_round_payload(payload, group_capacity=2)
+        assert decode_round_payload(vec, group_capacity=2)["n_groups"] == -1
+
+    def test_capacity_overflow_raises(self):
+        with pytest.raises(ValueError, match="exceed wire capacity"):
+            encode_round_payload(self.PAYLOAD, group_capacity=1)
+        with pytest.raises(ValueError, match="quarantined ids"):
+            encode_round_payload(
+                self.PAYLOAD, group_capacity=4, quarantine_capacity=1
+            )
+
+    def test_length_mismatch_raises(self):
+        vec = encode_round_payload(self.PAYLOAD, group_capacity=4,
+                                   quarantine_capacity=4)
+        with pytest.raises(ValueError, match="length"):
+            decode_round_payload(vec, group_capacity=5, quarantine_capacity=4)
+
+
+# -----------------------------------------------------------------------------
+# JaxProcessCollective
+# -----------------------------------------------------------------------------
+
+
+class TestJaxProcessCollective:
+    def test_world1_real_path(self):
+        """Real process_allgather on the single-process runtime."""
+        coll = JaxProcessCollective(1)
+        payload = encode_round_payload(
+            {"idx_budget": 5, "n_groups": 1, "sizes": [2], "tokens": [64]},
+            group_capacity=2,
+        )
+        out = coll.all_gather(0, payload)
+        assert len(out) == 1
+        assert np.array_equal(np.asarray(out[0]), payload)
+        assert coll.stats.rounds == 1
+        assert coll.calls_per_tag == {"primary": 1}
+
+    def test_world1_through_resilient_watchdog(self):
+        """Satisfies the same wrapper contract as LoopbackCollective."""
+        coll = ResilientCollective(JaxProcessCollective(1), deadline_s=30.0)
+        out = coll.all_gather(0, np.arange(4, dtype=np.int64))
+        assert len(out) == 1
+        assert np.array_equal(np.asarray(out[0]), np.arange(4))
+
+    def test_forced_multiprocess_lane(self, monkeypatch):
+        """Simulated 3-process runtime: the transport returns one stacked
+        payload per process and the collective slices them apart."""
+        def fake_allgather(arr):
+            return np.stack([np.asarray(arr)] * 3)
+
+        monkeypatch.setattr(multihost_utils, "process_allgather", fake_allgather)
+        coll = JaxProcessCollective(3)
+        out = coll.all_gather(1, np.array([7, 8], dtype=np.int64))
+        assert len(out) == 3
+        assert all(np.array_equal(np.asarray(o), [7, 8]) for o in out)
+
+    def test_wrong_world_size_is_desync(self, monkeypatch):
+        monkeypatch.setattr(
+            multihost_utils,
+            "process_allgather",
+            lambda arr: np.stack([np.asarray(arr)] * 2),
+        )
+        coll = JaxProcessCollective(3)
+        with pytest.raises(ProtocolDesyncError, match="out of lockstep"):
+            coll.all_gather(0, np.array([1], dtype=np.int64))
+
+    def test_uniform_call_audit_across_tags(self, monkeypatch):
+        """Lemma 3 mirror: a secondary-tag gather may never outrun the
+        primary round count (LoopbackCollective enforces the per-rank
+        version of the same invariant)."""
+        monkeypatch.setattr(
+            multihost_utils,
+            "process_allgather",
+            lambda arr: np.stack([np.asarray(arr)] * 2),
+        )
+        coll = JaxProcessCollective(2)
+        payload = np.array([1], dtype=np.int64)
+        coll.all_gather(0, payload)
+        coll.all_gather(0, payload, tag="scale")
+        with pytest.raises(ProtocolDesyncError, match="uniform all_gather"):
+            coll.all_gather(0, payload, tag="scale")
+
+    def test_watchdog_times_out_wedged_gather(self, monkeypatch):
+        """A hung remote surfaces as RankTimeoutError, not an infinite join."""
+        monkeypatch.setattr(
+            multihost_utils,
+            "process_allgather",
+            lambda arr: time.sleep(30),
+        )
+        coll = ResilientCollective(
+            JaxProcessCollective(1),
+            deadline_s=0.05,
+            max_retries=1,
+            backoff_base_s=0.001,
+        )
+        with pytest.raises(RankTimeoutError) as err:
+            coll.all_gather(0, np.array([1], dtype=np.int64))
+        assert err.value.attempts == 2
+        assert err.value.failed_ranks == [0]
+
+    def test_watchdog_propagates_inner_errors(self, monkeypatch):
+        def boom(arr):
+            raise ProtocolDesyncError("injected")
+
+        monkeypatch.setattr(multihost_utils, "process_allgather", boom)
+        coll = ResilientCollective(JaxProcessCollective(1), deadline_s=5.0)
+        with pytest.raises(ProtocolDesyncError, match="injected"):
+            coll.all_gather(0, np.array([1], dtype=np.int64))
+
+
+# -----------------------------------------------------------------------------
+# Full failed-rank reporting (the straggler-census bugfix)
+# -----------------------------------------------------------------------------
+
+
+class TestFailedRankReporting:
+    def drop_script(self, ranks, rounds=1, attempts=8):
+        return {
+            (rnd, att, rank): "drop"
+            for rnd in range(rounds)
+            for att in range(attempts)
+            for rank in ranks
+        }
+
+    def test_exception_carries_every_failed_rank(self):
+        inner = LoopbackCollective(4)
+        coll = ResilientCollective(
+            inner,
+            deadline_s=0.5,
+            max_retries=1,
+            backoff_base_s=0.0,
+            injector=ScriptedInjector(self.drop_script({1, 3})),
+        )
+        with pytest.raises(RankTimeoutError) as err:
+            coll.gather_round(lambda r: {"rank": r})
+        exc = err.value
+        assert exc.failed_ranks == [1, 3]
+        assert exc.rank == 1  # backward-compatible first-rank field
+        assert [r for r, _ in exc.failures] == [1, 3]
+        assert "rank 1" in str(exc) and "rank 3" in str(exc)
+
+    def test_epoch_abort_threads_full_casualty_list(self):
+        records = make_records(60, seed=5)
+        ex = StreamExecutor(
+            records,
+            POLICY,
+            4,
+            small_cfg(round_deadline_s=0.5, round_retries=1,
+                      retry_backoff_s=0.0),
+            seed=7,
+            num_hosts=2,
+            fault_injector=ScriptedInjector(self.drop_script({1, 3})),
+        )
+        with pytest.raises(EpochAborted) as err:
+            while ex.step() is not None:
+                pass
+        assert err.value.failed_ranks == [1, 3]
+        # ...into the round audit's abort census...
+        assert ex.telemetry.aborts
+        abort = ex.telemetry.aborts[-1]
+        assert abort["failed_ranks"] == [1, 3]
+        assert abort["attempts"] == 2
+        # ...and through the checkpoint the abort rides (stream_abort.json).
+        ck = err.value.checkpoint()
+        timeline = obs.RoundTimeline.from_dict(
+            ck.payload["telemetry"]["rounds"]
+        )
+        assert timeline.aborts[-1]["failed_ranks"] == [1, 3]
+
+    def test_round_timeline_abort_roundtrip(self):
+        timeline = obs.RoundTimeline(4)
+        timeline.record_abort(
+            [3, 1, 1], round_index=9, attempts=3, reason="dropped"
+        )
+        assert timeline.aborts == [
+            {
+                "failed_ranks": [1, 3],
+                "round_index": 9,
+                "attempts": 3,
+                "reason": "dropped",
+            }
+        ]
+        back = obs.RoundTimeline.from_dict(timeline.as_dict())
+        assert back.aborts == timeline.aborts
+        # Pre-v4 serialized timelines carry no aborts key.
+        legacy = timeline.as_dict()
+        legacy.pop("aborts")
+        assert obs.RoundTimeline.from_dict(legacy).aborts == []

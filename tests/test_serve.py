@@ -340,6 +340,47 @@ class TestTtlShedding:
         assert engine.requests[rid].state == FINISHED
         assert engine.stats.shed == 0
 
+    def test_shedding_runs_under_full_slot_saturation(self, served):
+        """Regression: _admit used to return early on free == 0 *before*
+        _shed_expired(), so under exactly the saturation §15.7 exists for,
+        expired waiters were never shed until a slot freed."""
+        from repro import obs
+        from repro.serve import RUNNING, SHED
+
+        reg = obs.default_registry()
+        reg.reset()
+        reg.enable()
+        clock = {"now": 0.0}
+        engine = make_engine(served)
+        engine.time_fn = lambda: clock["now"]
+        # Fill every slot with long-running no-TTL requests...
+        runners = [
+            engine.submit(prompt, 12)
+            for prompt, _ in synth_requests(served[0], CONFIG.num_slots, seed=3)
+        ]
+        engine.tick()
+        assert engine.slots.free_count == 0
+        assert all(engine.requests[r].state == RUNNING for r in runners)
+        # ...then queue waiters whose TTL lapses while the slots stay busy.
+        waiters = [
+            engine.submit(prompt, new, ttl_s=1.0)
+            for prompt, new in synth_requests(served[0], 4, seed=4)
+        ]
+        shed_before = reg.counter("odb_serve_shed_total").value
+        clock["now"] += 5.0  # TTLs long expired; runners still mid-decode
+        engine.tick()
+        assert engine.slots.free_count == 0  # saturation held through the tick
+        assert all(engine.requests[r].state == RUNNING for r in runners)
+        assert all(engine.requests[w].state == SHED for w in waiters)
+        assert engine.stats.shed == len(waiters)
+        assert reg.counter("odb_serve_shed_total").value - shed_before == len(
+            waiters
+        )
+        engine.window.close()
+        while not engine.done:
+            engine.tick()
+        reg.reset()
+
 
 class TestTelemetry:
     """One engine tick must emit the documented span + metric set

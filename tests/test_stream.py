@@ -569,3 +569,42 @@ class TestTelemetry:
             reg.enable()
             tracer.reset()
             tracer.disable()
+
+    def test_resident_gauge_set_on_admit_and_quarantine_paths(self):
+        """Regression: only take() used to set ``odb_window_resident``, so
+        occupancy sampled between takes under-reported admissions and
+        quarantine skips.  Both _admit_one outcomes must refresh the gauge."""
+        from repro import obs
+        from repro.chaos import poison_samples
+        from repro.data.sampler import SamplerSpec
+
+        reg = obs.default_registry()
+        reg.reset()
+        reg.enable()
+        try:
+            records = make_records(20, 3)
+            spec = SamplerSpec(dataset_size=20, world_size=2, seed=0)
+            window = AdmissionWindow(
+                records, POLICY, spec, shuffle_epoch=0, max_quarantine=1
+            )
+            gauge = reg.gauge("odb_window_resident")
+            window._admit_one(0)  # admit path, before any take()
+            assert gauge.value == 1
+            window._admit_one(1)
+            assert gauge.value == 2
+            # Quarantine path: resident is unchanged (nothing staged), but
+            # the gauge must still be *written* — poison it to prove the
+            # refresh happens rather than a stale value surviving.
+            gauge.set(99)
+            poison = {window.order[window.rank_position(0)]}
+            with poison_samples(poison):
+                window._admit_one(0)
+            assert window.stats.quarantined == 1
+            assert gauge.value == 2
+            # And take() keeps the gauge at the delivered-adjusted value.
+            got = window.take(1, 1)
+            assert len(got) == 1
+            assert gauge.value == 1
+        finally:
+            reg.reset()
+            reg.enable()
