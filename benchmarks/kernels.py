@@ -14,6 +14,15 @@ Everything measured on this host (DESIGN.md §11):
     alone and (b) causal + segment-range block skipping — the acceptance
     quantity: packing must translate into a strictly lower live-tile
     fraction on the high-CV profile;
+  * the **fetched-tile / bytes census** of the scalar-prefetch pruned grid
+    (DESIGN.md §17) against the dense grid — the PR-10 acceptance rail: the
+    pruned grid's kv-DMA fraction must sit strictly below the dense grid's
+    on the longtail-packed profile, with bit-level fwd+grad parity between
+    the two grids;
+  * the **sharded dry-run cell**: the flash route (both grids) lowered and
+    compiled under the production mesh via shard_map over the batch axis
+    (``repro.launch.flash_dryrun`` in a subprocess with forced host
+    devices);
   * the autotuned (block_q, block_kv) schedule for the bench shape
     (``repro.kernels.autotune``, persisted under ``artifacts/autotune/``).
 
@@ -33,6 +42,7 @@ from benchmarks.common import csv_line
 from repro.core import OdbConfig
 from repro.data import OnlineDynamicLoader, get_dataset
 from repro.kernels.flash_attention import live_tile_counts, select_block
+from repro.kernels.liveness import fetched_tile_counts
 
 HIGH_CV_PROFILE = "longtail"
 
@@ -89,6 +99,88 @@ def aggregate_census(by_width: dict[int, np.ndarray], block: int) -> dict:
         "rows": int(sum(r.shape[0] for r in by_width.values())),
         "causal_live_fraction": agg["causal_live"] / total if total else 0.0,
         "segment_live_fraction": agg["segment_live"] / total if total else 0.0,
+    }
+
+
+def aggregate_fetch_census(
+    by_width: dict[int, np.ndarray],
+    block: int,
+    *,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+) -> dict:
+    """kv-tile DMA census over every collected row, dense vs pruned grid.
+
+    Sums the exact per-width fetch counts (``fetched_tile_counts`` walks the
+    grid in pipeline order, counting kv index-map transitions) and reports
+    pooled fractions — the BENCH acceptance quantity."""
+    agg = {
+        "grid_steps": 0,
+        "live_tiles": 0,
+        "dense_fetches": 0,
+        "pruned_fetches": 0,
+        "dense_fetched_bytes": 0,
+        "pruned_fetched_bytes": 0,
+    }
+    for width, rows in by_width.items():
+        t = fetched_tile_counts(
+            rows, width, block, block,
+            causal=True, heads=heads, kv_heads=kv_heads, head_dim=head_dim,
+        )
+        for key in agg:
+            agg[key] += t[key]
+    steps = agg["grid_steps"]
+    return {
+        **agg,
+        "block": block,
+        "rows": int(sum(r.shape[0] for r in by_width.values())),
+        "dense_fetched_fraction": agg["dense_fetches"] / steps if steps else 0.0,
+        "pruned_fetched_fraction": agg["pruned_fetches"] / steps if steps else 0.0,
+    }
+
+
+def sharded_flash_cell(*, seq: int, timeout_s: float = 540.0) -> dict:
+    """Run the production-mesh shard_map validation in a subprocess (the
+    forced host-platform device count must be set before jax init, which an
+    already-initialized bench process cannot do in-process)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("FLASH_DRYRUN_DEVICES", "256")
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [
+        sys.executable, "-m", "repro.launch.flash_dryrun",
+        "--seq", str(seq), "--rows-per-shard", "1", "--json",
+    ]
+    try:
+        proc = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=timeout_s, env=env
+        )
+    except subprocess.TimeoutExpired:
+        return {"status": "error", "error": f"timeout after {timeout_s}s"}
+    for line in reversed(proc.stdout.strip().splitlines()):
+        try:
+            out = json.loads(line)
+            break
+        except ValueError:
+            continue
+    else:
+        return {
+            "status": "error",
+            "error": f"rc={proc.returncode}",
+            "stderr": proc.stderr[-2000:],
+        }
+    cells = out.get("cells", {})
+    ok = bool(cells) and all(c.get("status") == "ok" for c in cells.values())
+    return {
+        "status": "ok" if ok else "error",
+        "devices": out.get("devices"),
+        "cells": cells,
     }
 
 
@@ -173,7 +265,10 @@ def bench_kernels(
         return out.reshape(b, s, h, d)
 
     def flash_fwd(q_, k_, v_):
-        return flash_attention(q_, k_, v_, seg, True, block, block)
+        return flash_attention(q_, k_, v_, seg, True, block, block, "dense")
+
+    def flash_pruned_fwd(q_, k_, v_):
+        return flash_attention(q_, k_, v_, seg, True, block, block, "pruned")
 
     def loss_of(fwd):
         def loss(q_, k_, v_):
@@ -182,30 +277,47 @@ def bench_kernels(
 
     xla_fwd_j = jax.jit(xla_fwd)
     flash_fwd_j = jax.jit(flash_fwd)
+    flash_pruned_fwd_j = jax.jit(flash_pruned_fwd)
     xla_bwd_j = jax.jit(loss_of(xla_fwd))
     flash_bwd_j = jax.jit(loss_of(flash_fwd))
+    flash_pruned_bwd_j = jax.jit(loss_of(flash_pruned_fwd))
 
     timings = {
         "xla_fwd_s": _time(xla_fwd_j, q, k, v, repeats=repeats),
         "flash_fwd_s": _time(flash_fwd_j, q, k, v, repeats=repeats),
+        "flash_pruned_fwd_s": _time(flash_pruned_fwd_j, q, k, v, repeats=repeats),
         "xla_fwdbwd_s": _time(xla_bwd_j, q, k, v, repeats=repeats),
         "flash_fwdbwd_s": _time(flash_bwd_j, q, k, v, repeats=repeats),
+        "flash_pruned_fwdbwd_s": _time(flash_pruned_bwd_j, q, k, v, repeats=repeats),
     }
 
-    # Parity rail: valid-row forward + gradient agreement of the two paths.
+    # Parity rails: valid-row forward + gradient agreement vs XLA, and
+    # bit-level (fwd + grads) agreement of the pruned grid vs the dense grid
+    # — the dense grid is the differential-testing oracle for the DMA-level
+    # pruning (identical accumulation sequence ⇒ identical bits).
     out_x = xla_fwd_j(q, k, v)
     out_f = flash_fwd_j(q, k, v)
+    out_p = flash_pruned_fwd_j(q, k, v)
     fwd_err = float(jnp.max(jnp.abs((out_x - out_f) * valid)))
     g_x = xla_bwd_j(q, k, v)
     g_f = flash_bwd_j(q, k, v)
+    g_p = flash_pruned_bwd_j(q, k, v)
     grad_err = max(
         float(jnp.max(jnp.abs(a - b_))) for a, b_ in zip(g_x, g_f)
     )
+    pruned_fwd_err = float(jnp.max(jnp.abs(out_f - out_p)))
+    pruned_grad_err = max(
+        float(jnp.max(jnp.abs(a - b_))) for a, b_ in zip(g_f, g_p)
+    )
 
     tiles = aggregate_census(by_width, census_block)
+    fetch = aggregate_fetch_census(
+        by_width, census_block, heads=h, kv_heads=kv, head_dim=d
+    )
+    sharded = sharded_flash_cell(seq=min(s, 512))
     blocks = autotune_blocks(
         b, s, h, kv, d, dtype=jnp.float32, causal=True, has_segments=True,
-        repeats=1,
+        repeats=1, grid="dense",
     )
     return {
         "backend": jax.default_backend(),
@@ -213,13 +325,26 @@ def bench_kernels(
         "shape": {"rows": b, "seq": s, "heads": h, "kv_heads": kv, "head_dim": d},
         "block": block,
         "timings": timings,
-        "parity": {"fwd_max_err_valid": fwd_err, "grad_max_err": grad_err},
+        "parity": {
+            "fwd_max_err_valid": fwd_err,
+            "grad_max_err": grad_err,
+            "pruned_fwd_max_err": pruned_fwd_err,
+            "pruned_grad_max_err": pruned_grad_err,
+            "pruned_fwd_bitexact": bool(jnp.array_equal(out_f, out_p)),
+            "pruned_grad_bitexact": all(
+                bool(jnp.array_equal(a, b_)) for a, b_ in zip(g_f, g_p)
+            ),
+        },
         "live_tiles": tiles,
         "skip_win": tiles["segment_live_fraction"] < tiles["causal_live_fraction"],
+        "fetch_census": fetch,
+        "prune_win": fetch["pruned_fetched_fraction"] < fetch["dense_fetched_fraction"],
+        "sharded": sharded,
         "autotune": {
             "picked": list(blocks),
             "key": shape_key(
-                b, s, h, kv, d, dtype=jnp.float32, causal=True, has_segments=True
+                b, s, h, kv, d, dtype=jnp.float32, causal=True,
+                has_segments=True, grid="dense",
             ),
             "schedule": {kk: list(vv) for kk, vv in cached_schedule().items()},
         },
@@ -270,11 +395,29 @@ def main(argv=None) -> list[str]:
             {"grad_err": f"{r['parity']['grad_max_err']:.2e}"},
         ),
         csv_line(
+            "kernels/flash_pruned/fwd", 1e6 * r["timings"]["flash_pruned_fwd_s"],
+            {"bitexact": int(r["parity"]["pruned_fwd_bitexact"])},
+        ),
+        csv_line(
+            "kernels/flash_pruned/fwdbwd",
+            1e6 * r["timings"]["flash_pruned_fwdbwd_s"],
+            {"bitexact": int(r["parity"]["pruned_grad_bitexact"])},
+        ),
+        csv_line(
             "kernels/live_tiles", 0.0,
             {
                 "causal": f"{r['live_tiles']['causal_live_fraction']:.4f}",
                 "segment": f"{r['live_tiles']['segment_live_fraction']:.4f}",
                 "skip_win": int(r["skip_win"]),
+            },
+        ),
+        csv_line(
+            "kernels/fetched_tiles", 0.0,
+            {
+                "dense": f"{r['fetch_census']['dense_fetched_fraction']:.4f}",
+                "pruned": f"{r['fetch_census']['pruned_fetched_fraction']:.4f}",
+                "prune_win": int(r["prune_win"]),
+                "sharded": r["sharded"]["status"],
             },
         ),
     ]

@@ -206,6 +206,14 @@ def bench_workers(
         cpu_count = os.cpu_count() or 1
     measured = sweep.get("2", {}).get("speedup_vs_nw0")
     enforce = cpu_count >= 3 and measured is not None
+    if os.environ.get("ODB_BENCH_REQUIRE_MULTICORE") and not enforce:
+        # The CI worker-speedup lane pins a >=3-core runner class exactly so
+        # this rail is always enforced; a quiet downgrade to informational
+        # there means the runner pin regressed, which must fail loudly.
+        raise RuntimeError(
+            f"ODB_BENCH_REQUIRE_MULTICORE set but the speedup rail cannot be "
+            f"enforced (cpu_count={cpu_count}, nw2 measured={measured})"
+        )
     speedup_rail = {
         "threshold": 1.15,
         "measured_nw2": measured,

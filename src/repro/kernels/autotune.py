@@ -56,10 +56,15 @@ def candidate_blocks(s: int) -> list[tuple[int, int]]:
 def shape_key(
     b: int, s: int, h: int, kv: int, d: int,
     *, dtype=jnp.float32, causal: bool = True, has_segments: bool = False,
+    grid: str = "dense",
 ) -> str:
+    # Keyed by grid variant (DESIGN.md §17): the pruned scalar-prefetch grid
+    # has a different DMA/compute balance per tile shape, so a schedule
+    # measured on one grid must never be served to the other.
     return (
         f"{jax.default_backend()}/b{b}s{s}h{h}kv{kv}d{d}"
         f"/{jnp.dtype(dtype).name}/causal{int(causal)}/seg{int(has_segments)}"
+        f"/grid.{grid}"
     )
 
 
@@ -118,6 +123,7 @@ def autotune_blocks(
     repeats: int = 2,
     probe_batch: int = 2,
     cache_path: str | os.PathLike | None = None,
+    grid: str = "dense",
 ) -> tuple[int, int]:
     """Measured (block_q, block_kv) for one shape cell, cached on disk.
 
@@ -126,7 +132,10 @@ def autotune_blocks(
     """
     path = pathlib.Path(cache_path) if cache_path is not None else DEFAULT_CACHE_PATH
     cache = _load_cache(path)
-    key = shape_key(b, s, h, kv, d, dtype=dtype, causal=causal, has_segments=has_segments)
+    key = shape_key(
+        b, s, h, kv, d, dtype=dtype, causal=causal,
+        has_segments=has_segments, grid=grid,
+    )
     if key in cache:
         obs.counter(
             "kernel_autotune_cache_hits_total",
@@ -152,7 +161,7 @@ def autotune_blocks(
     best_t = None
     for bq, bk in candidate_blocks(s):
         def fwd(q_, k_, v_):
-            return flash_attention(q_, k_, v_, seg, causal, bq, bk)
+            return flash_attention(q_, k_, v_, seg, causal, bq, bk, grid)
 
         if include_bwd:
             def run(q_, k_, v_):

@@ -97,6 +97,28 @@ def select_block(s: int, requested: int, cap: int = 128) -> int:
     return unaligned
 
 
+def resolve_blocks(s: int, block_q: int, block_kv: int) -> tuple[int, int]:
+    """Resolve one ``(block_q, block_kv)`` pair for sequence length ``s``.
+
+    ``select_block`` is a projection onto the divisors of ``s`` but is *not*
+    idempotent on arbitrary requests (``select_block(120, 15) == 8``, not
+    15), so independently re-resolving in the forward and backward could in
+    principle drift if the two passes ever saw different raw requests.  The
+    routing layer (kernels/ops.py) calls this once per shape and threads the
+    resolved pair through the ``custom_vjp`` nondiff args; both passes then
+    assert the pair is a fixed point (``expect_resolved=True``) instead of
+    silently re-resolving.
+    """
+    return select_block(s, block_q), select_block(s, block_kv)
+
+
+def _check_resolved(s: int, block_q: int, block_kv: int) -> None:
+    assert (block_q, block_kv) == resolve_blocks(s, block_q, block_kv), (
+        f"block pair ({block_q}, {block_kv}) is not resolved for S={s}: "
+        f"routing must pin resolve_blocks() once and pass the fixed point"
+    )
+
+
 def _block_live(causal, qb, kb, block_q, block_kv, qseg_ref, kseg_ref):
     """Scalar liveness of one (q, kv) block pair: causal reach AND (for
     packed rows) overlapping per-block segment-id ranges."""
@@ -198,6 +220,7 @@ def segment_flash_attention(
     block_kv: int = 128,
     interpret: bool = False,
     return_residuals: bool = False,
+    expect_resolved: bool = False,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Forward kernel; with ``return_residuals`` also emits per-row
     ``lse = m + log(l)`` of shape (B, S, H) for the backward pass."""
@@ -206,6 +229,8 @@ def segment_flash_attention(
     assert h % kv == 0, (h, kv)
     g = h // kv
     scale = scale if scale is not None else 1.0 / (d**0.5)
+    if expect_resolved:
+        _check_resolved(s, block_q, block_kv)
     block_q = select_block(s, block_q)
     block_kv = select_block(s, block_kv)
     nq, nk = s // block_q, s // block_kv
@@ -396,6 +421,7 @@ def segment_flash_attention_bwd(
     block_q: int = 128,
     block_kv: int = 128,
     interpret: bool = False,
+    expect_resolved: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Tiled two-pass backward: returns (dq, dk, dv) without ever
     materializing the (S × S) probability matrix."""
@@ -403,6 +429,8 @@ def segment_flash_attention_bwd(
     kv = k.shape[2]
     g = h // kv
     scale = scale if scale is not None else 1.0 / (d**0.5)
+    if expect_resolved:
+        _check_resolved(s, block_q, block_kv)
     block_q = select_block(s, block_q)
     block_kv = select_block(s, block_kv)
     nq, nk = s // block_q, s // block_kv
@@ -507,6 +535,411 @@ def segment_flash_attention_bwd(
         interpret=interpret,
         **kwargs,
     )(*args)
+    return dq, dk, dv
+
+
+# -----------------------------------------------------------------------------
+# Scalar-prefetch pruned grid (DESIGN.md §17)
+# -----------------------------------------------------------------------------
+#
+# The dense grid above predicates dead tiles out of the MXU but still DMAs
+# every kv tile.  The pruned variants keep the *static* grid shape (data-
+# dependent grid sizes are impossible at trace time) and instead route the kv
+# BlockSpec index_map through a compacted live-block index fed in via
+# ``PrefetchScalarGridSpec``: step t of a row visits its t-th live kv block
+# (ascending), and steps past the row's live count repeat the last live block
+# — the Pallas pipeline skips the re-DMA when consecutive index_map results
+# agree, so dead tiles are never fetched.  Compute is predicated on
+# ``t < count``; init fires at t == 0 and finalize at the last grid step, so
+# every output block is written even for rows with zero live tiles.
+#
+# Because live blocks are visited in the same ascending order the dense grid
+# uses (which never touches the accumulators on dead tiles), the fp32
+# accumulation sequence is identical and the pruned outputs/grads are
+# bit-exact against the dense grid — asserted by tests and the bench parity
+# rail, with the dense grid kept as the differential-testing oracle.
+
+
+def _require_prefetch():
+    if pltpu is None:  # pragma: no cover - exercised only on broken installs
+        raise RuntimeError(
+            "scalar-prefetch grid needs jax.experimental.pallas.tpu "
+            "(PrefetchScalarGridSpec); route attn_grid=dense instead"
+        )
+
+
+def _flash_prefetch_body(
+    kv_idx_ref, kv_cnt_ref,
+    q_ref, k_ref, v_ref, qseg_ref, kseg_ref, o_ref, lse_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, scale, causal, block_q, block_kv, num_kv_blocks,
+):
+    ib = pl.program_id(0)
+    qb = pl.program_id(2)
+    t = pl.program_id(3)
+    kb = kv_idx_ref[ib, qb, t]
+
+    @pl.when(t == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch[...], NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch[...])
+        acc_scratch[...] = jnp.zeros_like(acc_scratch[...])
+
+    @pl.when(t < kv_cnt_ref[ib, qb])
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        allowed = _tile_mask(qb, kb, block_q, block_kv, causal, qseg_ref, kseg_ref)
+        scores = jnp.where(allowed, scores, NEG_INF)
+
+        m_prev = m_scratch[:, 0]
+        l_prev = l_scratch[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1))
+        safe_m = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+        p = jnp.where(allowed, jnp.exp(scores - safe_m[:, None]), 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF, 0.0, jnp.exp(m_prev - safe_m))
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc = acc_scratch[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        m_scratch[...] = jnp.broadcast_to(m_new[:, None], m_scratch.shape)
+        l_scratch[...] = jnp.broadcast_to(l_new[:, None], l_scratch.shape)
+        acc_scratch[...] = acc
+
+    @pl.when(t == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scratch[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scratch[...] / denom[:, None]).astype(o_ref.dtype)
+        if lse_ref is not None:
+            m = m_scratch[:, 0]
+            lse = jnp.where(l > 0.0, m + jnp.log(denom), NEG_INF)
+            lse_ref[...] = lse.astype(lse_ref.dtype)
+
+
+def segment_flash_attention_pruned(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    segment_ids: jax.Array,  # (B, S) int32; 0 = padding — required
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+    return_residuals: bool = False,
+    expect_resolved: bool = False,
+    tables=None,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
+    """Scalar-prefetch forward: dense-grid math, DMA-pruned kv fetch."""
+    _require_prefetch()
+    assert segment_ids is not None, "pruned grid requires segment ids"
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    if expect_resolved:
+        _check_resolved(s, block_q, block_kv)
+    block_q = select_block(s, block_q)
+    block_kv = select_block(s, block_kv)
+    nq, nk = s // block_q, s // block_kv
+
+    if tables is None:
+        from repro.kernels.liveness import build_liveness_tables
+
+        tables = build_liveness_tables(
+            segment_ids, block_q=block_q, block_kv=block_kv, causal=causal
+        )
+    kv_idx, kv_cnt = tables.kv_idx, tables.kv_count
+
+    q_spec = pl.BlockSpec(
+        (None, block_q, None, d), lambda ib, ih, iq, ik, I, C: (ib, iq, ih, 0)
+    )
+    kv_spec = pl.BlockSpec(
+        (None, block_kv, None, d),
+        lambda ib, ih, iq, ik, I, C: (ib, I[ib, iq, ik], ih // g, 0),
+    )
+    qseg_spec = pl.BlockSpec((None, block_q), lambda ib, ih, iq, ik, I, C: (ib, iq))
+    kseg_spec = pl.BlockSpec(
+        (None, block_kv), lambda ib, ih, iq, ik, I, C: (ib, I[ib, iq, ik])
+    )
+    o_spec = pl.BlockSpec(
+        (None, block_q, None, d), lambda ib, ih, iq, ik, I, C: (ib, iq, ih, 0)
+    )
+
+    body = functools.partial(
+        _flash_prefetch_body,
+        scale=scale, causal=causal, block_q=block_q,
+        block_kv=block_kv, num_kv_blocks=nk,
+    )
+    out_shape: object = jax.ShapeDtypeStruct(q.shape, q.dtype)
+    out_specs: object = o_spec
+    if return_residuals:
+        out_shape = (
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, s, h), jnp.float32),
+        )
+        out_specs = (
+            o_spec,
+            pl.BlockSpec(
+                (None, block_q, None), lambda ib, ih, iq, ik, I, C: (ib, iq, ih)
+            ),
+        )
+
+        def kernel(I, C, qr, kr, vr, qs, ks, o_ref, lse_ref, m, l, acc):
+            body(I, C, qr, kr, vr, qs, ks, o_ref, lse_ref, m, l, acc)
+    else:
+        def kernel(I, C, qr, kr, vr, qs, ks, o_ref, m, l, acc):
+            body(I, C, qr, kr, vr, qs, ks, o_ref, None, m, l, acc)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, qseg_spec, kseg_spec],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    kwargs = {}
+    cp = _compiler_params()
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        **kwargs,
+    )(kv_idx, kv_cnt, q, k, v, segment_ids, segment_ids)
+
+
+def _bwd_dq_prefetch_body(
+    kv_idx_ref, kv_cnt_ref,
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+    dq_ref, dq_scratch,
+    *, scale, causal, block_q, block_kv, num_kv_blocks,
+):
+    """q-stationary dQ over the pruned row index — mirrors _bwd_dq_body."""
+    ib = pl.program_id(0)
+    qb = pl.program_id(2)
+    t = pl.program_id(3)
+    kb = kv_idx_ref[ib, qb, t]
+
+    @pl.when(t == 0)
+    def _init():
+        dq_scratch[...] = jnp.zeros_like(dq_scratch[...])
+
+    @pl.when(t < kv_cnt_ref[ib, qb])
+    def _compute():
+        _, k, _, _, ds = _recompute_p_ds(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+            scale=scale, causal=causal, block_q=block_q, block_kv=block_kv,
+            qb=qb, kb=kb,
+        )
+        dq_scratch[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ()))
+        ) * scale
+
+    @pl.when(t == num_kv_blocks - 1)
+    def _finalize():
+        dq_ref[...] = dq_scratch[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_prefetch_body(
+    q_idx_ref, q_cnt_ref,
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+    dk_ref, dv_ref, dk_scratch, dv_scratch,
+    *, scale, causal, block_q, block_kv, num_q_blocks, group,
+):
+    """kv-stationary dK/dV over the transposed column index: the sequential
+    axis still walks (group member, q step) pairs, but the q step now maps
+    through ``q_idx[b, kb]`` so each member only fetches the q tiles that
+    attend into this kv tile."""
+    ib = pl.program_id(0)
+    kb = pl.program_id(2)
+    t = pl.program_id(3)
+    qt = t % num_q_blocks
+    qb = q_idx_ref[ib, kb, qt]
+
+    @pl.when(t == 0)
+    def _init():
+        dk_scratch[...] = jnp.zeros_like(dk_scratch[...])
+        dv_scratch[...] = jnp.zeros_like(dv_scratch[...])
+
+    @pl.when(qt < q_cnt_ref[ib, kb])
+    def _compute():
+        q, _, do, p, ds = _recompute_p_ds(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qseg_ref, kseg_ref,
+            scale=scale, causal=causal, block_q=block_q, block_kv=block_kv,
+            qb=qb, kb=kb,
+        )
+        dv_scratch[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+        dk_scratch[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ()))
+        ) * scale
+
+    @pl.when(t == group * num_q_blocks - 1)
+    def _finalize():
+        dk_ref[...] = dk_scratch[...].astype(dk_ref.dtype)
+        dv_ref[...] = dv_scratch[...].astype(dv_ref.dtype)
+
+
+def segment_flash_attention_bwd_pruned(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    segment_ids: jax.Array,  # required
+    out: jax.Array,
+    lse: jax.Array,
+    do: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+    expect_resolved: bool = False,
+    tables=None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pruned two-pass backward: the dQ pass reuses the forward row index,
+    the dK/dV pass the transposed column index."""
+    _require_prefetch()
+    assert segment_ids is not None, "pruned grid requires segment ids"
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    if expect_resolved:
+        _check_resolved(s, block_q, block_kv)
+    block_q = select_block(s, block_q)
+    block_kv = select_block(s, block_kv)
+    nq, nk = s // block_q, s // block_kv
+
+    if tables is None:
+        from repro.kernels.liveness import build_liveness_tables
+
+        tables = build_liveness_tables(
+            segment_ids, block_q=block_q, block_kv=block_kv, causal=causal
+        )
+
+    delta = jnp.sum(
+        do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1
+    )  # (B, S, H)
+    args = [q, k, v, do, lse, delta, segment_ids, segment_ids]
+
+    kwargs = {}
+    cp = _compiler_params()
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+
+    # -- pass 1: q-stationary dQ over the row index --------------------------
+    def dq_specs():
+        def at(fn):
+            return lambda ib, ih, iq, ik, I, C: fn(ib, ih, iq, I[ib, iq, ik])
+
+        q_spec = pl.BlockSpec(
+            (None, block_q, None, d), at(lambda ib, ih, iq, ik: (ib, iq, ih, 0))
+        )
+        kv_spec = pl.BlockSpec(
+            (None, block_kv, None, d), at(lambda ib, ih, iq, ik: (ib, ik, ih // g, 0))
+        )
+        row_spec = pl.BlockSpec(
+            (None, block_q, None), at(lambda ib, ih, iq, ik: (ib, iq, ih))
+        )
+        seg_specs = [
+            pl.BlockSpec((None, block_q), at(lambda ib, ih, iq, ik: (ib, iq))),
+            pl.BlockSpec((None, block_kv), at(lambda ib, ih, iq, ik: (ib, ik))),
+        ]
+        return [q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec] + seg_specs
+
+    dq_body = functools.partial(
+        _bwd_dq_prefetch_body,
+        scale=scale, causal=causal, block_q=block_q, block_kv=block_kv,
+        num_kv_blocks=nk,
+    )
+
+    def dq_kernel(I, C, qr, kr, vr, dor, lser, dr, qs, ks, dqr, acc):
+        dq_body(I, C, qr, kr, vr, dor, lser, dr, qs, ks, dqr, acc)
+
+    dq_grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, nq, nk),
+        in_specs=dq_specs(),
+        out_specs=pl.BlockSpec(
+            (None, block_q, None, d),
+            lambda ib, ih, iq, ik, I, C: (ib, iq, ih, 0),
+        ),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+    )
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid_spec=dq_grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(tables.kv_idx, tables.kv_count, *args)
+
+    # -- pass 2: kv-stationary dK/dV over the column index -------------------
+    def dkv_specs():
+        def at(fn):
+            return lambda ib, ikv, ik, t, I, C: fn(
+                ib, ikv * g + t // nq, I[ib, ik, t % nq], ik
+            )
+
+        q_spec = pl.BlockSpec(
+            (None, block_q, None, d), at(lambda ib, ih, iq, ik: (ib, iq, ih, 0))
+        )
+        kv_spec = pl.BlockSpec(
+            (None, block_kv, None, d), at(lambda ib, ih, iq, ik: (ib, ik, ih // g, 0))
+        )
+        row_spec = pl.BlockSpec(
+            (None, block_q, None), at(lambda ib, ih, iq, ik: (ib, iq, ih))
+        )
+        seg_specs = [
+            pl.BlockSpec((None, block_q), at(lambda ib, ih, iq, ik: (ib, iq))),
+            pl.BlockSpec((None, block_kv), at(lambda ib, ih, iq, ik: (ib, ik))),
+        ]
+        return [q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec] + seg_specs
+
+    dkv_body = functools.partial(
+        _bwd_dkv_prefetch_body,
+        scale=scale, causal=causal, block_q=block_q, block_kv=block_kv,
+        num_q_blocks=nq, group=g,
+    )
+
+    def dkv_kernel(I, C, qr, kr, vr, dor, lser, dr, qs, ks, dkr, dvr, ka, va):
+        dkv_body(I, C, qr, kr, vr, dor, lser, dr, qs, ks, dkr, dvr, ka, va)
+
+    kv_out_spec = pl.BlockSpec(
+        (None, block_kv, None, d), lambda ib, ikv, ik, t, I, C: (ib, ik, ikv, 0)
+    )
+    dkv_grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, nk, g * nq),
+        in_specs=dkv_specs(),
+        out_specs=(kv_out_spec, kv_out_spec),
+        scratch_shapes=[
+            pltpu.VMEM((block_kv, d), jnp.float32),
+            pltpu.VMEM((block_kv, d), jnp.float32),
+        ],
+    )
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid_spec=dkv_grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ),
+        interpret=interpret,
+        **kwargs,
+    )(tables.q_idx, tables.q_count, *args)
     return dq, dk, dv
 
 

@@ -44,6 +44,11 @@ def main() -> None:
         help="enable the obs subsystem and write metrics.json / trace.json "
              "into DIR at exit (DESIGN.md §13)",
     )
+    ap.add_argument(
+        "--telemetry-port", type=int, default=None, metavar="PORT",
+        help="serve a live Prometheus scrape endpoint (GET /metrics) from a "
+             "daemon thread while serving (0 = ephemeral port)",
+    )
     args = ap.parse_args()
 
     reporter = None
@@ -51,6 +56,12 @@ def main() -> None:
         from repro import obs
 
         reporter = obs.enable_telemetry(args.telemetry)
+    scrape = None
+    if args.telemetry_port is not None:
+        from repro import obs
+
+        scrape = obs.start_scrape_server(args.telemetry_port)
+        print(f"[serve] telemetry scrape: {scrape.url}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not cfg.has_decode:
@@ -112,6 +123,8 @@ def main() -> None:
         )
         for kind, path in sorted(paths.items()):
             print(f"[serve] telemetry {kind}: {path}")
+    if scrape is not None:
+        scrape.stop()
 
 
 if __name__ == "__main__":

@@ -24,6 +24,10 @@ class ShapeCell:
     # preference, not a pin: launch/steps resolves it against the backend,
     # so CPU dry-runs still lower the XLA blockwise path.
     attn_impl: str = "auto"
+    # Preferred flash grid variant (DESIGN.md §17): "pruned" routes kv-tile
+    # DMA through the scalar-prefetch liveness index on packed cells; only
+    # consulted when the cell actually takes the flash route.
+    attn_grid: str = "auto"
 
 
 SHAPES = {
@@ -32,7 +36,8 @@ SHAPES = {
     # ~row_capacity real tokens instead of one right-padded sample); routed
     # through the Pallas flash kernel when the backend compiles it.
     "train_4k_packed": ShapeCell(
-        "train_4k_packed", 4096, 64, "train", layout="packed", attn_impl="flash"
+        "train_4k_packed", 4096, 64, "train", layout="packed",
+        attn_impl="flash", attn_grid="pruned",
     ),
     "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),

@@ -45,13 +45,21 @@ def _route_cell_model(model: LM, cell: ShapeCell) -> LM:
     explicit route already pinned on the model config wins.
     """
     cfg = model.cfg
-    if cell.kind != "train" or cfg.attn_impl != "auto":
+    if cell.kind != "train":
         return model
-    packed = cell.layout == "packed" or cell.attn_impl == "flash"
-    impl = resolve_attn_impl(cfg, packed=packed)
-    if impl == cfg.attn_impl:
+    pins = {}
+    if cfg.attn_impl == "auto":
+        packed = cell.layout == "packed" or cell.attn_impl == "flash"
+        impl = resolve_attn_impl(cfg, packed=packed)
+        if impl != cfg.attn_impl:
+            pins["attn_impl"] = impl
+    # The cell's grid preference (DESIGN.md §17) pins an unset attn_grid;
+    # kernels/ops still degrades it to dense when segments are absent.
+    if getattr(cfg, "attn_grid", "auto") == "auto" and cell.attn_grid != "auto":
+        pins["attn_grid"] = cell.attn_grid
+    if not pins:
         return model
-    return dataclasses.replace(model, cfg=dataclasses.replace(cfg, attn_impl=impl))
+    return dataclasses.replace(model, cfg=dataclasses.replace(cfg, **pins))
 
 
 def abstract_train_state(model: LM, opt_cfg: OptimizerConfig):

@@ -113,6 +113,12 @@ def main() -> None:
              "Pallas flash kernel, or auto (flash when packed on TPU)",
     )
     ap.add_argument(
+        "--attn-grid", default="auto", choices=("auto", "dense", "pruned"),
+        help="flash grid variant (DESIGN.md §17): dense walks every kv tile, "
+             "pruned skips dead-tile DMA through the scalar-prefetch "
+             "liveness index; auto = pruned when packed on TPU",
+    )
+    ap.add_argument(
         "--attn-autotune", action="store_true",
         help="pick the flash kernel's (block_q, block_kv) per shape cell "
              "from a short measured probe (cached under artifacts/autotune/)",
@@ -134,6 +140,12 @@ def main() -> None:
              "rounds.json into DIR at exit (DESIGN.md §13)",
     )
     ap.add_argument(
+        "--telemetry-port", type=int, default=None, metavar="PORT",
+        help="serve a live Prometheus scrape endpoint (GET /metrics) from a "
+             "daemon thread on this port while training (0 = ephemeral); "
+             "independent of --telemetry's at-exit files",
+    )
+    ap.add_argument(
         "--hosts", type=int, default=1,
         help="simulated multi-host lane (DESIGN.md §16): partition the DGAP "
              "ranks over this many sharded admission windows, each running "
@@ -150,10 +162,17 @@ def main() -> None:
         # Before any instrumented object is built, so construction-time
         # cached instruments bind to live metrics.
         reporter = obs.enable_telemetry(args.telemetry)
+    scrape = None
+    if args.telemetry_port is not None:
+        from repro import obs
+
+        scrape = obs.start_scrape_server(args.telemetry_port)
+        print(f"[train] telemetry scrape: {scrape.url}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(
-        cfg, attn_impl=args.attn_impl, attn_autotune=args.attn_autotune
+        cfg, attn_impl=args.attn_impl, attn_grid=args.attn_grid,
+        attn_autotune=args.attn_autotune,
     )
     model = LM(cfg)
     dataset = get_dataset(args.dataset, scale=args.data_scale)
@@ -229,7 +248,10 @@ def main() -> None:
             if restarts > args.max_restarts or not args.checkpoint_dir:
                 raise
 
-    print(f"[train] layout={layout} attn_impl={trainer.attn_impl}")
+    print(
+        f"[train] layout={layout} attn_impl={trainer.attn_impl} "
+        f"attn_grid={trainer.attn_grid}"
+    )
     for h in trainer.history[-10:]:
         print(Trainer.format_log_line(h))
     audit = loader.last_audit
@@ -258,6 +280,8 @@ def main() -> None:
         )
         for kind, path in sorted(paths.items()):
             print(f"[train] telemetry {kind}: {path}")
+    if scrape is not None:
+        scrape.stop()
 
 
 if __name__ == "__main__":

@@ -142,7 +142,19 @@ def use_flash_attention(cfg, segments, cache) -> bool:
     return False
 
 
-def _flash_blocks(cfg, s: int, b: int, h: int, kv: int, dh: int, dtype, has_segments):
+def resolve_flash_grid(cfg, segments) -> str:
+    """Concrete grid variant for this call (DESIGN.md §17): the config's
+    ``attn_grid`` policy resolved against segment presence and backend —
+    shared by the kernel dispatch and the autotune cache key."""
+    from repro.kernels.ops import resolve_grid
+
+    return resolve_grid(getattr(cfg, "attn_grid", "auto"), segments)
+
+
+def _flash_blocks(
+    cfg, s: int, b: int, h: int, kv: int, dh: int, dtype, has_segments,
+    grid: str = "dense",
+):
     """Resolve the (block_q, block_kv) schedule for one shape cell."""
     from repro.kernels.autotune import autotune_blocks, heuristic_blocks
     from repro.kernels.flash_attention import select_block
@@ -158,6 +170,7 @@ def _flash_blocks(cfg, s: int, b: int, h: int, kv: int, dh: int, dtype, has_segm
         return autotune_blocks(
             b, s, h, kv, dh,
             dtype=dtype, causal=cfg.causal, has_segments=has_segments,
+            grid=grid,
         )
     return heuristic_blocks(s)
 
@@ -284,10 +297,11 @@ def gqa_attention(
         if use_flash_attention(cfg, segments, None):
             from repro.kernels.ops import flash_attention
 
+            grid = resolve_flash_grid(cfg, segments)
             bq, bkv = _flash_blocks(
-                cfg, s, b, h, kv, dh, q.dtype, segments is not None
+                cfg, s, b, h, kv, dh, q.dtype, segments is not None, grid
             )
-            out = flash_attention(q, k, v, segments, cfg.causal, bq, bkv)
+            out = flash_attention(q, k, v, segments, cfg.causal, bq, bkv, grid)
         else:
             out = _block_sdpa(
                 q.reshape(b, s, kv, g, dh), k, v, positions, positions,
@@ -303,10 +317,11 @@ def gqa_attention(
         # numerically interchangeable (tests/test_kernels.py).
         from repro.kernels.ops import flash_attention
 
+        grid = resolve_flash_grid(cfg, segments)
         bq, bkv = _flash_blocks(
-            cfg, s, b, h, kv, dh, q.dtype, segments is not None
+            cfg, s, b, h, kv, dh, q.dtype, segments is not None, grid
         )
-        out = flash_attention(q, k, v, segments, cfg.causal, bq, bkv)
+        out = flash_attention(q, k, v, segments, cfg.causal, bq, bkv, grid)
         return out.reshape(b, s, h * dh) @ params["wo"], None
 
     q = q.reshape(b, s, kv, g, dh)

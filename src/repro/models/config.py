@@ -73,6 +73,13 @@ class ArchConfig:
     # backend compiles Pallas (TPU), xla otherwise.  Decode always uses the
     # XLA cache path.
     attn_impl: Literal["xla", "flash", "auto"] = "auto"
+    # Flash grid variant (DESIGN.md §17): "dense" walks every kv tile and
+    # predicates dead ones out of the MXU; "pruned" routes the kv BlockSpec
+    # through a scalar-prefetched liveness index so dead tiles are never
+    # DMA'd; "auto" = pruned exactly when the batch is packed (segments
+    # present) on TPU.  Without segments there is no liveness table and
+    # every variant resolves to dense.
+    attn_grid: Literal["dense", "pruned", "auto"] = "auto"
     # Flash kernel block schedule; 0 = pick automatically (measured probe
     # when attn_autotune, else the largest divisor of S ≤ 128).
     attn_block_q: int = 0

@@ -41,6 +41,7 @@ from repro.obs.report import (
     RunReporter,
     enable_telemetry,
 )
+from repro.obs.scrape import ScrapeServer, start_scrape_server
 from repro.obs.trace import NULL_SPAN, Span, SpanTracer, default_tracer
 
 __all__ = [
@@ -58,6 +59,7 @@ __all__ = [
     "NullMetric",
     "RoundTimeline",
     "RunReporter",
+    "ScrapeServer",
     "Span",
     "SpanTracer",
     "counter",
@@ -68,6 +70,7 @@ __all__ = [
     "histogram",
     "instant",
     "span",
+    "start_scrape_server",
 ]
 
 

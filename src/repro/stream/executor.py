@@ -131,10 +131,11 @@ class StreamExecutor:
         self.epoch = epoch
         self.max_logical_iterations = max_logical_iterations
         self.spec = SamplerSpec(dataset_size=n, world_size=world_size, seed=seed)
-        if num_hosts < 1 or world_size % num_hosts != 0:
+        if num_hosts < 1 or num_hosts > world_size:
             raise ValueError(
-                f"num_hosts {num_hosts} must be a positive divisor of "
-                f"world_size {world_size} (each host owns an equal rank block)"
+                f"num_hosts {num_hosts} must be in [1, world_size "
+                f"{world_size}] (each host owns a contiguous, possibly "
+                "uneven rank block)"
             )
         # P > 1 runs one ShardedWindow per host behind a WindowRouter — the
         # in-process simulation of a multi-host deployment (DESIGN.md §16).

@@ -68,19 +68,32 @@ def split_lookahead(lookahead: int, world_size: int) -> list[int]:
 
 
 def host_rank_blocks(world_size: int, num_hosts: int) -> list[tuple[int, ...]]:
-    """Contiguous rank blocks per host (host ``h`` owns ranks
-    ``[h·W/P, (h+1)·W/P)``), the deployment layout where each host's local
-    devices are its rank block."""
+    """Contiguous rank blocks per host, the deployment layout where each
+    host's local devices are its rank block.
+
+    ``W % P == 0`` gives the equal partition (host ``h`` owns ranks
+    ``[h·W/P, (h+1)·W/P)``).  Uneven world sizes spread the remainder over
+    the first ``W % P`` hosts — the same rule as :func:`split_lookahead` —
+    so blocks stay contiguous and sizes differ by at most one:
+    ``(W=6, P=4) -> (0,1) (2,3) (4,) (5,)`` and
+    ``(W=5, P=2) -> (0,1,2) (3,4)``.  Every host must own at least one
+    rank, so ``P > W`` (an empty block) stays an error.
+    """
     if num_hosts <= 0:
         raise ValueError(f"num_hosts must be positive, got {num_hosts}")
-    if world_size % num_hosts != 0:
+    if num_hosts > world_size:
         raise ValueError(
-            f"world_size {world_size} not divisible by num_hosts {num_hosts}"
+            f"num_hosts {num_hosts} > world_size {world_size}: "
+            "some host would own no rank"
         )
-    block = world_size // num_hosts
-    return [
-        tuple(range(h * block, (h + 1) * block)) for h in range(num_hosts)
-    ]
+    base, extra = divmod(world_size, num_hosts)
+    blocks: list[tuple[int, ...]] = []
+    start = 0
+    for h in range(num_hosts):
+        size = base + (1 if h < extra else 0)
+        blocks.append(tuple(range(start, start + size)))
+        start += size
+    return blocks
 
 
 @dataclasses.dataclass

@@ -49,6 +49,7 @@ __all__ = [
     "dp_shardmap_step",
     "global_batch_arrays",  # re-exported from core.layout (layout-aware)
     "make_train_step",
+    "resolve_attn_grid",
     "resolve_attn_impl",
     "unify_step_shapes",
 ]
@@ -73,6 +74,22 @@ def resolve_attn_impl(cfg, *, packed: bool, backend: str | None = None) -> str:
         return "xla"
     backend = backend or jax.default_backend()
     return "flash" if (packed and backend == "tpu") else "xla"
+
+
+def resolve_attn_grid(cfg, *, packed: bool, backend: str | None = None) -> str:
+    """Pin ``attn_grid="auto"`` to a concrete flash grid variant (DESIGN.md
+    §17): the scalar-prefetch pruned grid exactly when the layout packs
+    segments into rows (the liveness tables are built from segment ids) and
+    the backend compiles Pallas; dense otherwise.  An explicit "pruned" is
+    honored whenever segments exist — interpret mode included, which is how
+    CPU tests and benches exercise the path."""
+    grid = getattr(cfg, "attn_grid", "auto")
+    if not packed:
+        return "dense"  # no segments -> nothing to build liveness from
+    if grid != "auto":
+        return grid
+    backend = backend or jax.default_backend()
+    return "pruned" if backend == "tpu" else "dense"
 
 
 def make_train_step(model: LM, opt_cfg: OptimizerConfig):
@@ -202,18 +219,24 @@ class Trainer:
         self._train_step = None
         self.history: list[dict] = []
         self.attn_impl: str | None = None  # resolved at _build_step
+        self.attn_grid: str | None = None  # resolved at _build_step
 
     def _build_step(self):
         # Pin the "auto" kernel route against the loader's actual layout so
         # what this trainer jits is explicit (and loggable), not an implicit
         # function of the backend probed mid-trace.
-        self.attn_impl = resolve_attn_impl(
-            self.model.cfg, packed=self.loader.layout.needs_segments
-        )
+        packed = self.loader.layout.needs_segments
+        self.attn_impl = resolve_attn_impl(self.model.cfg, packed=packed)
+        self.attn_grid = resolve_attn_grid(self.model.cfg, packed=packed)
+        pins = {}
         if self.attn_impl != self.model.cfg.attn_impl:
+            pins["attn_impl"] = self.attn_impl
+        if self.attn_grid != self.model.cfg.attn_grid:
+            pins["attn_grid"] = self.attn_grid
+        if pins:
             self.model = dataclasses.replace(
                 self.model,
-                cfg=dataclasses.replace(self.model.cfg, attn_impl=self.attn_impl),
+                cfg=dataclasses.replace(self.model.cfg, **pins),
             )
         self._train_step = jax.jit(
             make_train_step(self.model, self.opt_cfg), donate_argnums=(0,)

@@ -16,6 +16,7 @@ import pytest
 
 from repro.kernels.flash_attention import (
     live_tile_counts,
+    resolve_blocks,
     segment_flash_attention,
     segment_flash_attention_bwd,
     select_block,
@@ -342,6 +343,185 @@ class TestKernelRouting:
             1, 128, 2, 1, 32, has_segments=True, repeats=1, cache_path=cache,
         )
         assert again == picked
+
+
+class TestPrunedGrid:
+    """Scalar-prefetch grid (DESIGN.md §17): DMA-level pruning must change
+    the fetch census, never the numbers — bit-exact vs the dense grid."""
+
+    def _packed(self, key, b=2, s=256, h=4, kv=2, d=32):
+        q, k, v = make_qkv(key, b, s, h, kv, d, jnp.float32)
+        seg = packed_test_segments(b, s)  # GQA + pad tail + all-padding row
+        return q, k, v, seg
+
+    def test_liveness_tables_match_tile_census(self):
+        from repro.kernels.liveness import build_liveness_tables
+
+        seg = packed_test_segments(3, 256)
+        census = live_tile_counts(np.asarray(seg), 256, 64, 64)
+        tables = build_liveness_tables(seg, block_q=64, block_kv=64)
+        assert int(jnp.sum(tables.kv_count)) == census["segment_live"]
+        assert int(jnp.sum(tables.q_count)) == census["segment_live"]
+        # Row index lists live blocks ascending, clamped past the count.
+        kv_idx = np.asarray(tables.kv_idx)
+        kv_cnt = np.asarray(tables.kv_count)
+        for ib in range(kv_idx.shape[0]):
+            for qb in range(kv_idx.shape[1]):
+                cnt = int(kv_cnt[ib, qb])
+                row = kv_idx[ib, qb]
+                assert list(row[:cnt]) == sorted(set(row[:cnt]))
+                if cnt:
+                    assert np.all(row[cnt:] == row[cnt - 1])
+                else:
+                    assert np.all(row == 0)
+
+    @pytest.mark.parametrize("blocks", [(64, 64), (128, 32), (128, 128)])
+    def test_pruned_fwd_bitexact(self, blocks):
+        bq, bk = blocks
+        q, k, v, seg = self._packed(jax.random.PRNGKey(20))
+        dense = flash_attention(q, k, v, seg, True, bq, bk, grid="dense")
+        pruned = flash_attention(q, k, v, seg, True, bq, bk, grid="pruned")
+        assert np.array_equal(np.asarray(dense), np.asarray(pruned))
+
+    def test_pruned_fwd_bitexact_ragged_blocks(self):
+        """S=200 resolves to block 40: pruning survives ragged grids."""
+        q, k, v = make_qkv(jax.random.PRNGKey(21), 1, 200, 2, 2, 32, jnp.float32)
+        seg = np.zeros((1, 200), np.int32)
+        seg[0, :90] = 1
+        seg[0, 90:170] = 2  # 30-token padding tail
+        seg = jnp.asarray(seg)
+        dense = flash_attention(q, k, v, seg, grid="dense")
+        pruned = flash_attention(q, k, v, seg, grid="pruned")
+        assert np.array_equal(np.asarray(dense), np.asarray(pruned))
+
+    def test_pruned_grads_bitexact(self):
+        q, k, v, seg = self._packed(jax.random.PRNGKey(22))
+        valid = jnp.asarray((np.asarray(seg) > 0)[:, :, None, None], jnp.float32)
+
+        def loss(grid):
+            def f(q, k, v):
+                out = flash_attention(q, k, v, seg, True, 64, 64, grid=grid)
+                return jnp.sum((out.astype(jnp.float32) * valid) ** 2)
+
+            return f
+
+        gd = jax.grad(loss("dense"), argnums=(0, 1, 2))(q, k, v)
+        gp = jax.grad(loss("pruned"), argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(gd, gp):
+            assert np.all(np.isfinite(np.asarray(b_)))
+            assert np.array_equal(np.asarray(a), np.asarray(b_))
+
+    def test_bwd_pruned_entry_direct(self):
+        from repro.kernels.flash_attention import (
+            segment_flash_attention_bwd_pruned,
+            segment_flash_attention_pruned,
+        )
+
+        q, k, v, seg = self._packed(jax.random.PRNGKey(23))
+        out, lse = segment_flash_attention_pruned(
+            q, k, v, seg, interpret=True, return_residuals=True,
+            block_q=64, block_kv=64,
+        )
+        ref_out, ref_lse = segment_flash_attention(
+            q, k, v, seg, interpret=True, return_residuals=True,
+            block_q=64, block_kv=64,
+        )
+        assert np.array_equal(np.asarray(out), np.asarray(ref_out))
+        assert np.array_equal(np.asarray(lse), np.asarray(ref_lse))
+        g = jax.random.normal(jax.random.PRNGKey(24), out.shape)
+        pruned = segment_flash_attention_bwd_pruned(
+            q, k, v, seg, out, lse, g, block_q=64, block_kv=64, interpret=True
+        )
+        dense = segment_flash_attention_bwd(
+            q, k, v, seg, out, lse, g, block_q=64, block_kv=64, interpret=True
+        )
+        for a, b_ in zip(dense, pruned):
+            assert np.array_equal(np.asarray(a), np.asarray(b_))
+
+    def test_resolve_grid_matrix(self):
+        from repro.kernels.ops import resolve_grid
+
+        seg = jnp.ones((1, 8), jnp.int32)
+        assert resolve_grid("pruned", None) == "dense"  # nothing to prune
+        assert resolve_grid("dense", seg) == "dense"
+        assert resolve_grid("pruned", seg) == "pruned"
+        assert resolve_grid(None, None) == "dense"
+        expected = "pruned" if jax.default_backend() == "tpu" else "dense"
+        assert resolve_grid("auto", seg) == expected
+        with pytest.raises(ValueError, match="grid"):
+            resolve_grid("sparse", seg)
+
+    def test_no_segments_degrades_to_dense(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(25), 1, 128, 2, 2, 32, jnp.float32)
+        a = flash_attention(q, k, v, None, grid="pruned")
+        b_ = flash_attention(q, k, v, None, grid="dense")
+        assert np.array_equal(np.asarray(a), np.asarray(b_))
+
+    def test_fetch_census_pruned_below_dense(self):
+        from repro.kernels.liveness import fetched_tile_counts
+
+        seg = packed_test_segments(3, 256)
+        census = fetched_tile_counts(
+            np.asarray(seg), 256, 64, 64, heads=4, kv_heads=2, head_dim=32
+        )
+        assert census["pruned_fetches"] < census["dense_fetches"]
+        assert census["pruned_fetched_fraction"] < census["dense_fetched_fraction"]
+        assert census["live_tiles"] <= census["pruned_fetches"]
+        assert census["dense_fetches"] * census["kv_tile_bytes"] == (
+            census["dense_fetched_bytes"]
+        )
+
+    def test_resolved_blocks_pinned_and_asserted(self):
+        """select_block is not idempotent on raw requests; expect_resolved
+        catches any pass fed an unresolved pair."""
+        assert select_block(120, 15) == 8  # the non-idempotence witness
+        bq, bk = 15, 15
+        r = resolve_blocks(120, bq, bk)
+        assert resolve_blocks(120, *r) == r  # fixed point after one pass
+        q, k, v, seg = self._packed(jax.random.PRNGKey(26), s=120)
+        with pytest.raises(AssertionError, match="not resolved"):
+            segment_flash_attention(
+                q, k, v, seg, block_q=15, block_kv=15,
+                interpret=True, expect_resolved=True,
+            )
+
+    def test_autotune_rekeyed_by_grid(self, tmp_path):
+        from repro.kernels.autotune import autotune_blocks, shape_key
+
+        assert shape_key(1, 128, 2, 1, 32, has_segments=True) != shape_key(
+            1, 128, 2, 1, 32, has_segments=True, grid="pruned"
+        )
+        cache = tmp_path / "attn_blocks.json"
+        a = autotune_blocks(
+            1, 128, 2, 1, 32, has_segments=True, repeats=1,
+            cache_path=cache, grid="dense",
+        )
+        b_ = autotune_blocks(
+            1, 128, 2, 1, 32, has_segments=True, repeats=1,
+            cache_path=cache, grid="pruned",
+        )
+        import json
+
+        entries = json.loads(cache.read_text())
+        keys = set(entries)
+        assert any("grid.dense" in key for key in keys)
+        assert any("grid.pruned" in key for key in keys)
+        assert 128 % a[0] == 0 and 128 % b_[1] == 0
+
+    def test_sharded_compile_cell(self):
+        """validate_flash_sharded on the host mesh: both grid variants
+        lower + compile under shard_map (the §17 dry-run contract)."""
+        from repro.launch.flash_dryrun import validate_flash_sharded
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+        for grid in ("dense", "pruned"):
+            rec = validate_flash_sharded(
+                mesh, grid, rows_per_shard=1, seq=128, heads=2, kv_heads=1,
+                head_dim=32, block_q=64, block_kv=64,
+            )
+            assert rec["status"] == "ok", rec.get("traceback")
+            assert rec["compile_s"] > 0
 
 
 SSD_SWEEP = [

@@ -97,9 +97,24 @@ class TestDecomposition:
         flat = [r for b in host_rank_blocks(12, 3) for r in b]
         assert flat == list(range(12))
 
-    def test_host_rank_blocks_rejects_uneven(self):
+    def test_host_rank_blocks_uneven_partition(self):
+        """W % P != 0: remainder spreads over the first W % P hosts, blocks
+        stay contiguous and differ in size by at most one."""
+        assert host_rank_blocks(6, 4) == [(0, 1), (2, 3), (4,), (5,)]
+        assert host_rank_blocks(5, 2) == [(0, 1, 2), (3, 4)]
+        assert host_rank_blocks(8, 3) == [(0, 1, 2), (3, 4, 5), (6, 7)]
+        for world in (5, 6, 7, 11):
+            for hosts in range(1, world + 1):
+                blocks = host_rank_blocks(world, hosts)
+                flat = [r for b in blocks for r in b]
+                assert flat == list(range(world))
+                sizes = [len(b) for b in blocks]
+                assert min(sizes) >= 1
+                assert max(sizes) - min(sizes) <= 1
+
+    def test_host_rank_blocks_rejects_empty_blocks(self):
         with pytest.raises(ValueError):
-            host_rank_blocks(8, 3)
+            host_rank_blocks(4, 5)  # some host would own no rank
         with pytest.raises(ValueError):
             host_rank_blocks(8, 0)
 
@@ -110,10 +125,12 @@ class TestDecomposition:
                 records, POLICY, make_spec(40, 4), shuffle_epoch=0, lookahead=3
             )
 
-    def test_executor_rejects_non_divisor_host_count(self):
+    def test_executor_rejects_out_of_range_host_count(self):
         records = make_records(40)
         with pytest.raises(ValueError, match="num_hosts"):
-            StreamExecutor(records, POLICY, 4, small_cfg(), num_hosts=3)
+            StreamExecutor(records, POLICY, 4, small_cfg(), num_hosts=5)
+        with pytest.raises(ValueError, match="num_hosts"):
+            StreamExecutor(records, POLICY, 4, small_cfg(), num_hosts=0)
 
 
 # -----------------------------------------------------------------------------
@@ -230,6 +247,9 @@ MATRIX = [
     (64, 8, 2, 16, True, 0),
     (64, 8, 8, None, False, 0),
     (90, 6, 3, 12, True, 0),
+    (90, 6, 4, 12, True, 0),     # uneven W % P: blocks (0,1) (2,3) (4,) (5,)
+    (75, 5, 2, None, True, 0),   # uneven W % P: blocks (0,1,2) (3,4)
+    (75, 5, 2, 10, False, 0),    # uneven + non-join + tight lookahead
     (60, 4, 2, None, False, 3),  # quarantine cell (poisoned below)
 ]
 
@@ -347,6 +367,32 @@ class TestResumeAcrossHostCounts:
         assert ck.payload["num_hosts"] == 2
         resumed = StreamExecutor.resume(
             StreamCheckpoint.from_json(ck.to_json()),
+            records,
+            POLICY,
+            num_hosts=resume_hosts,
+        )
+        assert resumed.num_hosts == resume_hosts
+        tail = drain(resumed)
+        assert stream_digest(head + tail) == stream_digest(ref)
+        assert resumed.audit().eta_identity == 0.0
+
+    @pytest.mark.parametrize("resume_hosts", [1, 2, 4, 6])
+    def test_bit_identical_tail_uneven_world(self, resume_hosts):
+        """W=6 over uneven host counts (P=4 leaves two singleton blocks):
+        the v4 per-rank checkpoint schema repartitions onto ANY host count
+        in [1, W], divisor or not."""
+        records = make_records(72, seed=11)
+        cfg = small_cfg()
+        ref = drain(
+            StreamExecutor(records, POLICY, 6, cfg, seed=4, lookahead=18)
+        )
+        ex = StreamExecutor(
+            records, POLICY, 6, cfg, seed=4, lookahead=18, num_hosts=4
+        )
+        cut = max(2, len(ref) // 3)
+        head = [ex.step() for _ in range(cut)]
+        resumed = StreamExecutor.resume(
+            StreamCheckpoint.from_json(ex.checkpoint().to_json()),
             records,
             POLICY,
             num_hosts=resume_hosts,

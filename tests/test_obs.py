@@ -467,3 +467,69 @@ class TestCrossProcessAggregator:
         CrossProcessAggregator(parent).merge("w0", child.state(), 1.0)
         parent.enable()
         assert "odb_w_total" not in parent.flat()
+
+
+class TestScrapeEndpoint:
+    """Live Prometheus scrape server (satellite of DESIGN.md §17 PR)."""
+
+    def test_serves_registry_text(self):
+        import urllib.request
+
+        from repro.obs import ScrapeServer
+
+        reg = MetricsRegistry()
+        reg.counter("odb_scrape_test_total").inc(3)
+        srv = ScrapeServer(registry=reg, port=0).start()
+        try:
+            with urllib.request.urlopen(srv.url, timeout=5) as resp:
+                assert resp.status == 200
+                assert "text/plain" in resp.headers["Content-Type"]
+                body = resp.read().decode()
+            assert "odb_scrape_test_total 3" in body
+        finally:
+            srv.stop()
+
+    def test_default_registry_resolved_per_request(self):
+        """Instruments created AFTER start() must appear in the scrape —
+        the registry is read per request, never captured at construction."""
+        import urllib.request
+
+        from repro.obs import start_scrape_server
+
+        srv = start_scrape_server(0)
+        try:
+            obs.counter("odb_scrape_late_total").inc()
+            with urllib.request.urlopen(srv.url, timeout=5) as resp:
+                body = resp.read().decode()
+            assert "odb_scrape_late_total 1" in body
+        finally:
+            srv.stop()
+
+    def test_unknown_path_404(self):
+        import urllib.error
+        import urllib.request
+
+        from repro.obs import ScrapeServer
+
+        srv = ScrapeServer(registry=MetricsRegistry(), port=0).start()
+        try:
+            with pytest.raises(urllib.error.HTTPError) as err:
+                urllib.request.urlopen(
+                    f"http://127.0.0.1:{srv.port}/nope", timeout=5
+                )
+            assert err.value.code == 404
+        finally:
+            srv.stop()
+
+    def test_stop_joins_thread_and_is_idempotent(self):
+        import threading
+
+        from repro.obs import ScrapeServer
+
+        srv = ScrapeServer(registry=MetricsRegistry(), port=0).start()
+        thread = srv._thread
+        assert thread is not None and thread.daemon
+        srv.stop()
+        assert not thread.is_alive()
+        assert "obs-scrape" not in {t.name for t in threading.enumerate()}
+        srv.stop()  # second stop: no-op, no raise
